@@ -1,0 +1,28 @@
+"""Roofline benchmark: convert dry-run artifacts into the §Roofline table
+(one row per arch x shape x mesh) and per-kind efficiency summaries."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+from repro.core import roofline
+
+Row = Tuple[str, float, str]
+
+
+def roofline_rows() -> List[Row]:
+    t0 = time.perf_counter()
+    rows = roofline.load_results("results/dryrun")
+    us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    out = []
+    for r in sorted(rows, key=lambda r: (r.arch, r.shape, r.mesh)):
+        out.append((f"roofline_{r.arch}_{r.shape}_{r.mesh}", us,
+                    f"bound={r.bound}|compute={r.compute_s * 1e3:.1f}ms"
+                    f"|mem={r.memory_s * 1e3:.1f}ms"
+                    f"|coll={r.collective_s * 1e3:.1f}ms"
+                    f"|useful={r.useful_ratio:.2f}"
+                    f"|frac={r.roofline_frac:.3f}"))
+    return out
+
+
+ALL = [roofline_rows]

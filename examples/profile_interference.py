@@ -1,0 +1,12 @@
+"""Profile this framework's own workloads with the paper's methodology.
+
+Reads the dry-run artifacts (run repro.launch.dryrun first), builds
+per-phase resource vectors, prints sensitivity fingerprints, and plans
+cross-architecture colocations on a shared v5e slice.
+
+Run:  PYTHONPATH=src python examples/profile_interference.py
+"""
+from repro.launch.profile import main
+
+if __name__ == "__main__":
+    main(["--plan"])

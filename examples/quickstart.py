@@ -1,0 +1,49 @@
+"""Quickstart: the paper's methodology in 60 lines.
+
+1. Build resource profiles for two workload phases (an MXU-bound prefill
+   and an HBM-bound decode) on the TPU v5e resource model.
+2. Quantify each phase's interference sensitivity (the paper's §4 sweep).
+3. Ask the colocation planner whether they can share a slice within SLO.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (TPU_V5E, KernelProfile, WorkloadProfile, estimate,
+                        plan_colocation, sensitivity)
+from repro.core.resources import RESOURCE_AXES
+
+
+def phase(name, **utils):
+    demand = {r: 0.0 for r in RESOURCE_AXES}
+    for axis, frac in utils.items():
+        demand[axis] = frac * TPU_V5E.capacity(axis)
+    return KernelProfile(name, demand=demand, duration=1.0)
+
+
+def main():
+    prefill = phase("prefill_32k", mxu=0.72, hbm=0.25, issue=0.30)
+    decode = phase("decode", mxu=0.04, hbm=0.86, issue=0.12)
+    train = phase("train_step", mxu=0.65, hbm=0.45, issue=0.35, ici=0.40)
+
+    print("== sensitivity fingerprints (slowdown under a 90% stressor) ==")
+    for p in (prefill, decode, train):
+        rep = sensitivity(p, TPU_V5E)
+        tops = ", ".join(f"{a}={rep.scores[a]:.2f}x" for a in rep.ranked()[:3])
+        print(f"  {p.name:12s} dominant axis: {rep.dominant():6s} ({tops})")
+
+    print("\n== pairwise colocation predictions ==")
+    for a, b in ((prefill, decode), (prefill, train), (decode, train)):
+        r = estimate([a, b], TPU_V5E)
+        print(f"  {a.name:12s} + {b.name:12s} -> "
+              + ", ".join(f"{k}: {v:.2f}x" for k, v in r.slowdowns.items()))
+
+    print("\n== planner (SLO: 1.3x) ==")
+    works = [WorkloadProfile(p.name, (p,), slo_slowdown=1.3)
+             for p in (prefill, decode, train)]
+    plan = plan_colocation(works, TPU_V5E)
+    for pl in plan.placements:
+        print("  colocate:", pl)
+    print("  run solo:", plan.solo)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""End-to-end training driver: a ~100M-parameter qwen3-family LM trained
+for a few hundred steps on the synthetic pipeline, with checkpointing,
+auto-resume and straggler monitoring — the full production loop at
+CPU-runnable scale.
+
+Run:  PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+"""
+import argparse
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.configs.base import RunConfig
+from repro.data import DataConfig, Prefetcher, SyntheticLM
+from repro.models import build_model
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt", default="/tmp/repro_tiny_lm")
+    args = ap.parse_args()
+
+    # ~100M params: a scaled-down qwen3 (same family: qk-norm, GQA)
+    cfg = get_config("qwen3-1.7b").with_overrides(
+        n_layers=6, d_model=512, d_ff=1536, vocab_size=8192,
+        attn=get_config("qwen3-1.7b").attn.__class__(
+            n_heads=8, n_kv_heads=4, head_dim=64, qk_norm=True),
+        attn_impl="flashref")
+    model = build_model(cfg)
+    print(f"params: {cfg.n_params() / 1e6:.1f}M")
+
+    tcfg = TrainerConfig(total_steps=args.steps, log_every=20,
+                         checkpoint_dir=args.ckpt, checkpoint_every=100,
+                         optimizer="adamw", lr=3e-4)
+    trainer = Trainer(model, RunConfig(num_microbatches=2), tcfg)
+    data = Prefetcher(SyntheticLM(cfg, DataConfig(
+        seq_len=256, global_batch=8, vocab_size=cfg.vocab_size)))
+    params, _, history = trainer.fit(data, jax.random.PRNGKey(0))
+    data.close()
+    first, last = history[0][1], history[-1][1]
+    print(f"\nloss {first:.3f} -> {last:.3f} "
+          f"({'OK: learning' if last < first - 0.3 else 'check convergence'})")
+    if trainer.straggler.events:
+        print(f"straggler events: {trainer.straggler.events}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""repro: interference-aware multi-pod JAX training/serving framework.
+
+Reproduction of "Understanding GPU Resource Interference One Level Deeper"
+(SoCC'25), adapted to TPU. See DESIGN.md.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,229 @@
+"""Kernel-level interference estimator (paper §5.1's proposed foundation).
+
+Model: concurrent kernels are fluid flows over a vector of shared
+resources. Kernel k running at speed s_k <= 1 consumes s_k * u_k[r] of
+axis r, where u_k[r] is its full-speed utilization (from KernelProfile).
+Speeds are the max-min fair fixed point computed by water-filling:
+
+  repeat:
+    find the most oversubscribed axis r* among unfrozen kernels;
+    if no axis oversubscribed -> all remaining kernels run at s=1;
+    else freeze every unfrozen kernel using r* at the fair speed
+         s = available_capacity(r*) / sum(u_k[r*]).
+
+This generalizes all the paper's findings in one mechanism:
+  * pitfall 1/2: a kernel with u[issue] ~ 1 (IPC 3.99/4) slows every
+    co-runner regardless of its occupancy or arithmetic intensity;
+  * §4.3: disjoint-SM kernels still contend on hbm/l2 axes;
+  * §4.4.1: smem-axis saturation by a bank-conflicted kernel;
+  * §4.4.3: a compute pipeline (mxu/vpu) can saturate before issue does;
+  * Fig.3: cache pollution enters through KernelProfile's working-set ->
+    hit-fraction discount (cache shared proportionally to working sets).
+
+Capacity scaling: `slot_fraction` models SM partitioning (green contexts /
+CUDA_MPS_ACTIVE_THREAD_PERCENTAGE): per-slot axes (mxu/vpu/issue/smem)
+scale with the slot share; device-wide axes (hbm/l2/ici) do NOT — exactly
+the distinction the paper draws in §4.3.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.profile import KernelProfile, WorkloadProfile
+from repro.core.resources import RESOURCE_AXES, DeviceModel
+
+PER_SLOT_AXES = ("mxu", "vpu", "issue", "smem")
+DEVICE_AXES = ("hbm", "l2", "ici")
+
+
+@dataclass
+class ColocationResult:
+    speeds: Dict[str, float]            # kernel name -> speed (<=1)
+    slowdowns: Dict[str, float]         # kernel name -> 1/speed
+    bottleneck: Dict[str, str]          # kernel name -> axis that froze it
+    axis_load: Dict[str, float]         # total demanded load per axis
+    feasible_slots: bool = True
+
+    def slowdown(self, name: str) -> float:
+        return self.slowdowns[name]
+
+
+# queueing inflation: near-saturated ISSUE slots delay every co-runner's
+# instructions even when its own demand fits in the leftover (paper Table 2
+# knee; calibrated there, validated out-of-sample on pitfall 2). Mild HBM
+# latency inflation mirrors Table 1's sub-saturation slowdowns.
+_INFLATION = {"issue": (1.05, 4), "hbm": (0.10, 4)}
+
+
+def _utilizations(kernels: Sequence[KernelProfile], dev: DeviceModel,
+                  slot_fraction: Dict[str, float]) -> Dict[str, Dict[str, float]]:
+    total_ws = sum(k.cache_working_set for k in kernels)
+    us = {}
+    for k in kernels:
+        share = (k.cache_working_set / total_ws
+                 if total_ws > dev.cache_capacity and k.cache_working_set
+                 else 1.0)
+        u = k.utilization(dev, cache_share=share)
+        frac = slot_fraction.get(k.name, 1.0)
+        # restricting a kernel to a slot fraction: per-slot axes capacity
+        # seen by that kernel shrinks -> its relative demand grows
+        if frac < 1.0:
+            for r in PER_SLOT_AXES:
+                u[r] = u[r] / max(frac, 1e-6)
+        us[k.name] = u
+    return us
+
+
+def estimate(kernels: Sequence[KernelProfile], dev: DeviceModel,
+             slot_fraction: Optional[Dict[str, float]] = None
+             ) -> ColocationResult:
+    """Steady-state speeds + total slowdowns for concurrent kernels.
+
+    slowdown_k = (t_col_k / t_iso_k) / s_k x inflation, where t_col uses
+    the COLOCATED cache share (pollution grows demand), s_k is the
+    water-filled speed, and inflation is the near-saturation queueing term.
+    """
+    slot_fraction = slot_fraction or {}
+    names = [k.name for k in kernels]
+    # cache model: isolated residency is proportional (min(1, C/ws));
+    # colocated STREAMING residency has a thrash cliff — once the combined
+    # working set exceeds capacity, interleaved streams evict each other
+    # before reuse (paper Fig. 3's 16MB peak), so hits collapse.
+    total_ws = sum(k.cache_working_set for k in kernels)
+    resident_col = 0.0 if total_ws > dev.cache_capacity else 1.0
+    us = {}
+    t_iso, t_col = {}, {}
+    for k in kernels:
+        share = resident_col if (len(kernels) > 1 and k.cache_working_set) \
+            else min(1.0, dev.cache_capacity / max(k.cache_working_set, 1.0)) \
+            if k.cache_working_set else 1.0
+        u = k.utilization(dev, cache_share=share)
+        frac = slot_fraction.get(k.name, 1.0)
+        if frac < 1.0:
+            for r in PER_SLOT_AXES:
+                u[r] = u[r] / max(frac, 1e-6)
+        us[k.name] = u
+        t_iso[k.name] = k.isolated_time(dev, cache_share=1.0)
+        t_col[k.name] = k.isolated_time(dev, cache_share=share)
+
+    speeds: Dict[str, float] = {n: 1.0 for n in names}
+    frozen: Dict[str, str] = {n: "none" for n in names}
+    axis_load = {r: sum(us[n][r] for n in names) for r in RESOURCE_AXES}
+
+    # per-axis max-min water-filling: on each oversubscribed axis, only
+    # kernels demanding MORE than the fair rate are throttled (a 0.14-IPC
+    # copy keeps its slots next to a 3.99-IPC hog; both hogs split evenly)
+    active = set(names)
+    used = {r: 0.0 for r in RESOURCE_AXES}
+    for _ in range(len(names) + len(RESOURCE_AXES)):
+        worst_axis, worst_ratio = None, 1.0 + 1e-9
+        for r in RESOURCE_AXES:
+            dem = sum(speeds[n] * us[n][r] for n in active)
+            cap = max(1.0 - used[r], 1e-9)
+            if dem / cap > worst_ratio:
+                worst_axis, worst_ratio = r, dem / cap
+        if worst_axis is None:
+            break
+        if worst_axis == "smem":
+            # bank-conflict serialization throttles EVERY user equally
+            # (paper Fig. 4: even low-smem-util GEMMs slow down)
+            s = 1.0 / worst_ratio
+            for n in list(active):
+                if speeds[n] * us[n][worst_axis] > 1e-12:
+                    speeds[n] *= s
+                    frozen[n] = worst_axis
+                    active.discard(n)
+                    for r in RESOURCE_AXES:
+                        used[r] += speeds[n] * us[n][r]
+            continue
+        # max-min rate cap theta on worst_axis: sum min(u_n, theta) = cap
+        users = sorted(active, key=lambda n: speeds[n] * us[n][worst_axis])
+        cap = max(1.0 - used[worst_axis], 1e-9)
+        remaining_cap = cap
+        remaining_users = [n for n in users
+                           if speeds[n] * us[n][worst_axis] > 1e-12]
+        theta = None
+        for idx, n in enumerate(remaining_users):
+            d = speeds[n] * us[n][worst_axis]
+            even = remaining_cap / (len(remaining_users) - idx)
+            if d <= even:
+                remaining_cap -= d
+            else:
+                theta = even
+                break
+        if theta is None:
+            break
+        for n in remaining_users:
+            d = speeds[n] * us[n][worst_axis]
+            if d > theta:
+                scale = theta / d
+                speeds[n] *= scale
+                frozen[n] = worst_axis
+                active.discard(n)
+                for r in RESOURCE_AXES:
+                    used[r] += speeds[n] * us[n][r]
+
+    # queueing inflation on near-saturated latency-sensitive axes: applies
+    # to MINORITY users of the axis (the majority owner is fluid-limited)
+    slowdowns = {}
+    for n in names:
+        base = (t_col[n] / max(t_iso[n], 1e-12)) / max(speeds[n], 1e-9)
+        infl = 1.0
+        for axis, (gamma, p) in _INFLATION.items():
+            u_n = us[n].get(axis, 0.0)
+            rho = min(1.0, sum(speeds[m] * us[m][axis] for m in names))
+            if (frozen.get(n) == axis or u_n <= 0.01
+                    or u_n >= 0.5 * max(rho, 1e-9)):
+                continue
+            infl += gamma * rho ** p
+        slowdowns[n] = base * infl
+
+    slots_needed = sum(k.slots_needed for k in kernels)
+    return ColocationResult(
+        speeds=speeds,
+        slowdowns=slowdowns,
+        bottleneck=frozen,
+        axis_load=axis_load,
+        feasible_slots=slots_needed <= dev.n_slots or slots_needed == 0,
+    )
+
+
+def pairwise_slowdown(a: KernelProfile, b: KernelProfile, dev: DeviceModel,
+                      slot_fraction: Optional[Dict[str, float]] = None
+                      ) -> Tuple[float, float]:
+    r = estimate([a, b], dev, slot_fraction)
+    return r.slowdown(a.name), r.slowdown(b.name)
+
+
+def colocation_speedup(a: KernelProfile, b: KernelProfile,
+                       dev: DeviceModel) -> float:
+    """Paper Table 3 metric: sequential time / colocated makespan."""
+    ta, tb = a.isolated_time(dev), b.isolated_time(dev)
+    r = estimate([a, b], dev)
+    # fluid makespan: run colocated until the shorter finishes, remainder solo
+    ra = ta / max(r.speeds[a.name], 1e-9)
+    rb = tb / max(r.speeds[b.name], 1e-9)
+    first = min(ra, rb)
+    if ra <= rb:
+        done_frac = first * r.speeds[b.name] / tb
+        makespan = first + (1 - done_frac) * tb
+    else:
+        done_frac = first * r.speeds[a.name] / ta
+        makespan = first + (1 - done_frac) * ta
+    return (ta + tb) / makespan
+
+
+def workload_slowdown(w: WorkloadProfile, others: Sequence[KernelProfile],
+                      dev: DeviceModel,
+                      slot_fraction: Optional[Dict[str, float]] = None
+                      ) -> float:
+    """Average slowdown of workload `w` when each of its kernels runs
+    against the (steady) background kernels — per-kernel granularity."""
+    tot_iso = tot_col = 0.0
+    for k in w.kernels:
+        t = k.isolated_time(dev) * k.duration_weight
+        r = estimate([k, *others], dev, slot_fraction)
+        tot_iso += t
+        tot_col += t * r.slowdown(k.name)
+    return tot_col / max(tot_iso, 1e-12)

@@ -1,0 +1,357 @@
+"""HLO text analysis — the framework's "NCU": per-instruction accounting
+over the *post-SPMD-partitioning* module (``compiled.as_text()``).
+
+XLA's built-in ``cost_analysis()`` counts each ``while`` body ONCE, which
+under-reports scan-over-layers / microbatch-accumulation programs by the
+trip count. This parser extracts trip counts from loop conditions and
+multiplies, giving executed-FLOPs / executed-bytes / executed-collective
+traffic — the numbers the roofline (§Roofline) and the interference
+profiler (repro.core.profile) consume.
+
+Capabilities:
+  * symbol table: instruction -> (shape, dtype, bytes),
+  * executed-multiplicity per computation (nested whiles multiply),
+  * MXU flops (dot ops, contracting dims parsed), VPU element counts,
+  * HBM traffic proxy: operand+result bytes at fusion boundaries,
+  * collective traffic per kind with per-chip ICI byte estimates.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "c64": 8, "c128": 16,
+    "u4": 1, "s4": 1, "token": 0, "opaque": 0,
+}
+
+_TYPE_RE = re.compile(
+    r"(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64|f64|"
+    r"f8e4m3fn|f8e5m2|f8e4m3|c64|c128|u4|s4)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^(]*?\)?)\s*"
+    r"([a-z][\w\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+(?:\([^)]*\))?\s*->")
+_SUBCOMP_KEYS = ("body", "condition", "to_apply", "calls",
+                 "branch_computations", "called_computations")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all", "collective-broadcast")
+
+# opcodes whose result/operands don't correspond to real memory traffic
+_NO_TRAFFIC = {"parameter", "tuple", "get-tuple-element", "constant",
+               "bitcast", "after-all", "iota", "while", "conditional",
+               "call", "custom-call", "partition-id", "replica-id",
+               "rng-get-and-update-state"}
+
+_ELEMENTWISE_TRANSCENDENTAL = {"exponential", "tanh", "log", "rsqrt", "sqrt",
+                               "power", "logistic", "sine", "cosine",
+                               "exponential-minus-one", "log-plus-one"}
+
+
+def _parse_shapes(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _TYPE_RE.finditer(type_str):
+        dims = tuple(int(d) for d in m.group(2).split(",")) if m.group(2) else ()
+        out.append((m.group(1), dims))
+    return out
+
+
+def _bytes_of(shapes) -> int:
+    total = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    shapes: List[Tuple[str, Tuple[int, ...]]]
+    result_bytes: int
+    operands: List[str] = field(default_factory=list)
+    attrs: str = ""
+    raw_args: str = ""
+
+
+@dataclass
+class Module:
+    comps: Dict[str, List[Instr]]
+    table: Dict[str, Instr]
+    mult: Dict[str, float]              # executed multiplicity per comp
+    fusion_bodies: set
+
+    def executed(self):
+        for cname, instrs in self.comps.items():
+            m = self.mult.get(cname, 0.0)
+            if m <= 0:
+                continue
+            for i in instrs:
+                yield m, cname, i
+
+
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+
+def parse_module(text: str) -> Module:
+    comps: Dict[str, List[Instr]] = {}
+    order: List[str] = []
+    cur: Optional[List[Instr]] = None
+    for line in text.splitlines():
+        # computation headers start at column 0 and end with '{'
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            m = _HDR_RE.match(line)
+            if m:
+                cur = []
+                comps[m.group(1)] = cur
+                order.append(m.group(1))
+            continue
+        mi = _INSTR_RE.match(line)
+        if mi and cur is not None:
+            name, type_str, opcode, rest = mi.groups()
+            depth, buf = 1, []
+            for ch in rest:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                buf.append(ch)
+            ops_str = "".join(buf)
+            attrs = rest[len(ops_str) + 1:]
+            operands = re.findall(r"%([\w.\-]+)", ops_str)
+            if not operands:  # un-%-prefixed form
+                operands = [t.strip().split(" ")[-1] for t in ops_str.split(",")
+                            if t.strip() and not t.strip()[0].isdigit()]
+                operands = [o for o in operands if re.fullmatch(r"[\w.\-]+", o)]
+            shapes = _parse_shapes(type_str)
+            cur.append(Instr(name, opcode, shapes, _bytes_of(shapes),
+                             operands, attrs, ops_str))
+
+    table = {}
+    for instrs in comps.values():
+        for i in instrs:
+            table[i.name] = i
+
+    # --- multiplicities ---
+    referenced = set()
+    sub_refs: Dict[str, List[Tuple[str, str]]] = defaultdict(list)
+    fusion_bodies = set()
+    for cname, instrs in comps.items():
+        for i in instrs:
+            for key in _SUBCOMP_KEYS:
+                for sub in re.findall(key + r"=\{?%?([\w.\-]+)", i.attrs or ""):
+                    referenced.add(sub)
+                    sub_refs[cname].append((i.opcode, sub))
+                    if i.opcode == "fusion" and key == "calls":
+                        fusion_bodies.add(sub)
+            # while body/cond tracked with the instr for trip counts
+    mult: Dict[str, float] = defaultdict(float)
+    for n in comps:
+        if n not in referenced:
+            mult[n] = 1.0
+
+    def trip_count(cond_name: str) -> int:
+        best = 1
+        names = [cond_name]
+        for i in comps.get(cond_name, []):    # one level of called comps
+            for key in _SUBCOMP_KEYS:
+                names += re.findall(key + r"=\{?%?([\w.\-]+)", i.attrs or "")
+        for n in names:
+            for i in comps.get(n, []):
+                if i.opcode == "constant":
+                    m = re.fullmatch(r"\s*(\d+)\s*", i.raw_args or "")
+                    if m:
+                        best = max(best, int(m.group(1)))
+        return best
+
+    for _ in range(8):   # fixed point over nesting depth
+        changed = False
+        for cname, instrs in comps.items():
+            m0 = mult.get(cname, 0.0)
+            if m0 <= 0:
+                continue
+            for i in instrs:
+                if i.opcode == "while":
+                    body = _attr(i, "body")
+                    cond = _attr(i, "condition")
+                    t = trip_count(cond) if cond else 1
+                    for sub, mm in ((body, m0 * t), (cond, m0 * (t + 1))):
+                        if sub in comps and mult.get(sub, 0) < mm:
+                            mult[sub] = mm
+                            changed = True
+                else:
+                    for key in _SUBCOMP_KEYS:
+                        for sub in re.findall(key + r"=\{?%?([\w.\-]+)",
+                                              i.attrs or ""):
+                            if sub in comps and mult.get(sub, 0) < m0:
+                                mult[sub] = m0
+                                changed = True
+        if not changed:
+            break
+    return Module(comps, table, dict(mult), fusion_bodies)
+
+
+def _attr(i: Instr, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", i.attrs or "")
+    return m.group(1) if m else None
+
+
+# --------------------------------------------------------------------- #
+#  FLOPs                                                                 #
+# --------------------------------------------------------------------- #
+def _dot_flops(i: Instr, table: Dict[str, Instr]) -> float:
+    """2 * prod(result dims) * prod(lhs contracting dims)."""
+    if not i.shapes:
+        return 0.0
+    res_elems = 1
+    for d in i.shapes[0][1]:
+        res_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", i.attrs or "")
+    contract = 1
+    if m and i.operands:
+        lhs = table.get(i.operands[0])
+        if lhs and lhs.shapes:
+            dims = lhs.shapes[0][1]
+            for idx in m.group(1).split(","):
+                if idx != "" and int(idx) < len(dims):
+                    contract *= dims[int(idx)]
+    return 2.0 * res_elems * contract
+
+
+@dataclass
+class ModuleStats:
+    mxu_flops: float = 0.0            # dot/conv flops (executed)
+    vpu_elems: float = 0.0            # elementwise+reduce output elements
+    transcendentals: float = 0.0
+    hbm_bytes: float = 0.0            # fusion-boundary operand+result bytes
+    coll_bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    coll_count_by_kind: Dict[str, int] = field(default_factory=dict)
+    opcode_bytes: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll_bytes_by_kind.values())
+
+    @property
+    def vpu_flops(self) -> float:
+        return self.vpu_elems  # ~1 flop per produced element (proxy)
+
+
+def _traffic(kind: str, operand_bytes: float, result_bytes: float) -> float:
+    if kind == "all-gather":
+        return max(result_bytes - operand_bytes, 0.0)
+    if kind in ("all-reduce", "collective-broadcast"):
+        return 2.0 * result_bytes
+    if kind == "reduce-scatter":
+        return max(operand_bytes - result_bytes, 0.0)
+    return operand_bytes
+
+
+def analyze(text: str, fused: bool = None) -> ModuleStats:
+    """fused=None autodetects: post-backend modules contain fusion ops and
+    use the fusion-boundary traffic model; pre-fusion (after_spmd) modules
+    use the materialized-tensor model (dots/reduces/slices count, pure
+    elementwise chains assumed fused away — the TPU-optimistic proxy)."""
+    mod = parse_module(text)
+    if fused is None:
+        fused = bool(mod.fusion_bodies)
+    st = ModuleStats(coll_bytes_by_kind=defaultdict(float),
+                     coll_count_by_kind=defaultdict(int),
+                     opcode_bytes=defaultdict(float))
+    for m, cname, i in mod.executed():
+        base = i.opcode.replace("-start", "")
+        if base in COLLECTIVES and not i.opcode.endswith("-done"):
+            ob = sum(mod.table[o].result_bytes for o in i.operands
+                     if o in mod.table)
+            st.coll_bytes_by_kind[base] += m * _traffic(base, ob, i.result_bytes)
+            st.coll_count_by_kind[base] += int(m)
+        if i.opcode in ("dot", "convolution"):
+            st.mxu_flops += m * _dot_flops(i, mod.table)
+        elif i.opcode in _ELEMENTWISE_TRANSCENDENTAL:
+            elems = i.result_bytes / max(_DTYPE_BYTES.get(i.shapes[0][0], 4), 1) \
+                if i.shapes else 0
+            st.transcendentals += m * elems
+            st.vpu_elems += m * elems
+        elif (i.opcode not in _NO_TRAFFIC and base not in COLLECTIVES
+              and i.opcode not in ("fusion", "copy", "copy-start", "copy-done",
+                                   "broadcast", "reshape", "transpose",
+                                   "slice", "dynamic-slice",
+                                   "dynamic-update-slice", "concatenate",
+                                   "gather", "scatter", "pad", "convert")):
+            if i.shapes:
+                bpe = max(_DTYPE_BYTES.get(i.shapes[0][0], 4), 1)
+                st.vpu_elems += m * (i.result_bytes / bpe)
+        # HBM proxy. Slicing ops read only the sliced region (NOT the full
+        # operand — scan bodies dynamic-slice stacked weights every
+        # iteration; counting the full stack would inflate ~n_layers x).
+        if (cname not in mod.fusion_bodies
+                and i.opcode not in _NO_TRAFFIC
+                and base not in COLLECTIVES):
+            if i.opcode in ("dynamic-slice", "slice", "gather"):
+                st.hbm_bytes += m * 2 * i.result_bytes
+            elif i.opcode in ("dynamic-update-slice", "scatter"):
+                upd = (mod.table[i.operands[1]].result_bytes
+                       if len(i.operands) > 1 and i.operands[1] in mod.table
+                       else i.result_bytes)
+                st.hbm_bytes += m * 2 * upd
+            elif i.opcode in ("dot", "convolution", "reduce", "sort"):
+                ob = sum(mod.table[o].result_bytes for o in i.operands
+                         if o in mod.table)
+                st.hbm_bytes += m * (ob + i.result_bytes)
+            elif not fused:
+                # pre-fusion module: elementwise/convert/broadcast chains
+                # are assumed fused away on TPU -> no standalone traffic
+                pass
+            elif i.opcode in ("broadcast", "iota"):
+                st.hbm_bytes += m * i.result_bytes
+            else:
+                op_bytes = [mod.table[o].result_bytes for o in i.operands
+                            if o in mod.table]
+                ob = sum(op_bytes)
+                total = ob + i.result_bytes
+                # in-place update pattern (e.g. fused dynamic-update-slice
+                # into a carried buffer): result aliases the big operand —
+                # true traffic is the updated region, not the whole buffer
+                if (i.opcode == "fusion" and op_bytes
+                        and i.result_bytes == max(op_bytes)
+                        and i.result_bytes > 4 * (total - 2 * i.result_bytes)
+                        and total - 2 * i.result_bytes > 0):
+                    total = 2 * (ob - i.result_bytes)
+                st.hbm_bytes += m * total
+        st.opcode_bytes[i.opcode] += m * i.result_bytes
+    # dots inside fusion bodies: count their flops but their HHM traffic is
+    # already covered by the enclosing fusion boundary.
+    st.coll_bytes_by_kind = dict(st.coll_bytes_by_kind)
+    st.coll_count_by_kind = dict(st.coll_count_by_kind)
+    st.opcode_bytes = dict(st.opcode_bytes)
+    return st
+
+
+# Backwards-compatible helpers -------------------------------------------------
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, float]
+    count_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_stats(text: str) -> CollectiveStats:
+    st = analyze(text)
+    return CollectiveStats(st.coll_bytes_by_kind, st.coll_count_by_kind)
+
+
+def opcode_histogram(text: str, weighted: bool = True) -> Dict[str, float]:
+    return analyze(text).opcode_bytes

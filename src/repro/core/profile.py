@@ -1,0 +1,163 @@
+"""Kernel / workload resource profiles — the paper's per-kernel NCU metric
+vector, one level deeper than any single utilization scalar.
+
+A ``KernelProfile`` records absolute demand per execution on every resource
+axis (FLOPs, bytes, instructions); ``utilization(dev)`` converts to the
+fraction of each axis consumed while the kernel runs at full speed, which
+is what the interference estimator consumes.
+
+Profiles come from three sources:
+  * ``from_hlo_stats``: the dry-run's executed-HLO accounting (the "NCU
+    for XLA" in repro.core.hlo) — real profiles of train/prefill/decode
+    phases of every architecture;
+  * ``analytic_*``: closed-form profiles of the microbenchmark stressors;
+  * paper-reported NCU metrics (see benchmarks/) for validation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.resources import RESOURCE_AXES, DeviceModel
+
+
+@dataclass(frozen=True)
+class KernelProfile:
+    name: str
+    demand: Dict[str, float]          # axis -> absolute work per execution
+    duration: Optional[float] = None  # isolated wall-time; None => resource
+                                      # bound (max of roofline terms). A
+                                      # duration above every roofline term
+                                      # models latency-/ILP-bound kernels
+                                      # (paper: 24%-FP64-pipe kernel).
+    cache_working_set: float = 0.0    # bytes in shared cache (L2/VMEM)
+    cache_hit_fraction: float = 0.0   # fraction of hbm demand cacheable
+    slots_needed: int = 0             # SMs/cores required (0 = flexible)
+    duration_weight: float = 1.0      # relative time share inside workload
+
+    def utilization(self, dev: DeviceModel,
+                    cache_share: float = 1.0) -> Dict[str, float]:
+        """Fraction of each axis consumed while running: u[r] =
+        (d[r]/t)/C_r, with cache hits discounting HBM demand."""
+        t = self.isolated_time(dev, cache_share)
+        if t <= 0:
+            return {r: 0.0 for r in RESOURCE_AXES}
+        eff = self.effective_demand(dev, cache_share)
+        return {r: (eff.get(r, 0.0) / t) / max(dev.capacity(r), 1e-9)
+                for r in RESOURCE_AXES}
+
+    def effective_demand(self, dev: DeviceModel,
+                         cache_share: float = 1.0) -> Dict[str, float]:
+        d = dict(self.demand)
+        if self.cache_working_set > 0 and self.cache_hit_fraction > 0:
+            resident = min(1.0, (dev.cache_capacity * cache_share)
+                           / max(self.cache_working_set, 1.0))
+            hit = self.cache_hit_fraction * resident
+            d["hbm"] = d.get("hbm", 0.0) * (1.0 - hit)
+            d["l2"] = max(d.get("l2", 0.0), self.demand.get("hbm", 0.0))
+        return d
+
+    def isolated_time(self, dev: DeviceModel,
+                      cache_share: float = 1.0) -> float:
+        eff = self.effective_demand(dev, cache_share)
+        t = max((eff.get(r, 0.0) / max(dev.capacity(r), 1e-9))
+                for r in RESOURCE_AXES)
+        return max(t, self.duration or 0.0)
+
+    def bottleneck(self, dev: DeviceModel) -> str:
+        eff = self.effective_demand(dev)
+        return max(RESOURCE_AXES,
+                   key=lambda r: eff.get(r, 0.0) / max(dev.capacity(r), 1e-9))
+
+
+@dataclass(frozen=True)
+class WorkloadProfile:
+    """A workload = weighted sequence of kernels/phases (per-kernel
+    granularity is the paper's takeaway #1)."""
+    name: str
+    kernels: Tuple[KernelProfile, ...]
+    slo_slowdown: float = 1.2          # max acceptable slowdown
+
+    def total_time(self, dev: DeviceModel) -> float:
+        return sum(k.isolated_time(dev) * k.duration_weight
+                   for k in self.kernels)
+
+    def mixed_utilization(self, dev: DeviceModel) -> Dict[str, float]:
+        """Time-weighted average utilization vector."""
+        tot = self.total_time(dev)
+        u = {r: 0.0 for r in RESOURCE_AXES}
+        for k in self.kernels:
+            t = k.isolated_time(dev) * k.duration_weight
+            ku = k.utilization(dev)
+            for r in RESOURCE_AXES:
+                u[r] += ku[r] * (t / max(tot, 1e-12))
+        return u
+
+
+# --------------------------------------------------------------------- #
+#  Builders                                                              #
+# --------------------------------------------------------------------- #
+# instructions per unit of work on TPU: one MXU issue drives a 128x128x8
+# systolic pass (~2.6e5 flops); one VPU issue drives 8x128 lanes x2 (fma)
+_MXU_FLOPS_PER_ISSUE = 128 * 128 * 8 * 2
+_VPU_FLOPS_PER_ISSUE = 8 * 128 * 2
+
+
+def _issue_demand(mxu_flops: float, vpu_flops: float) -> float:
+    return (mxu_flops / _MXU_FLOPS_PER_ISSUE
+            + vpu_flops / _VPU_FLOPS_PER_ISSUE)
+
+
+def from_hlo_stats(name: str, stats, n_devices: int = 1) -> KernelProfile:
+    """Build a per-device phase profile from repro.core.hlo.ModuleStats."""
+    return KernelProfile(
+        name=name,
+        demand={
+            "mxu": stats.mxu_flops,
+            "vpu": stats.vpu_flops,
+            "issue": _issue_demand(stats.mxu_flops, stats.vpu_flops),
+            "hbm": stats.hbm_bytes,
+            "l2": stats.hbm_bytes,
+            "smem": stats.mxu_flops / 9.0,     # MXU operand re-streaming
+            "ici": stats.collective_bytes,
+        })
+
+
+def from_dryrun_json(rec: dict, name: Optional[str] = None) -> KernelProfile:
+    h = rec["hlo_exec"]
+    return KernelProfile(
+        name=name or f"{rec['arch']}:{rec['shape']}",
+        demand={
+            "mxu": h["mxu_flops"],
+            "vpu": h["vpu_flops"],
+            "issue": _issue_demand(h["mxu_flops"], h["vpu_flops"]),
+            "hbm": h["hbm_bytes"],
+            "l2": h["hbm_bytes"],
+            "smem": h["mxu_flops"] / 9.0,
+            "ici": rec["collectives"]["total_bytes"],
+        })
+
+
+def analytic_matmul(name: str, m: int, n: int, k: int, dtype_bytes: int = 2,
+                    iters: int = 1) -> KernelProfile:
+    flops = 2.0 * m * n * k * iters
+    bytes_ = (m * k + k * n + m * n) * dtype_bytes
+    return KernelProfile(name, demand={
+        "mxu": flops, "vpu": 0.0, "issue": flops / 256.0,
+        "hbm": bytes_, "l2": bytes_, "smem": flops / 50.0, "ici": 0.0})
+
+
+def analytic_copy(name: str, nbytes: float, passes: int = 1,
+                  hit_fraction: float = 0.0) -> KernelProfile:
+    b = 2.0 * nbytes * passes
+    return KernelProfile(name, demand={
+        "mxu": 0.0, "vpu": nbytes / 4 * passes, "issue": nbytes / 16 * passes,
+        "hbm": b, "l2": b, "smem": 0.0, "ici": 0.0},
+        cache_working_set=2.0 * nbytes, cache_hit_fraction=hit_fraction)
+
+
+def analytic_vpu(name: str, elems: float, iters: int, ilp: int = 1) -> KernelProfile:
+    flops = 2.0 * elems * iters * ilp
+    return KernelProfile(name, demand={
+        "mxu": 0.0, "vpu": flops, "issue": flops / 2.0,
+        "hbm": elems * 8, "l2": elems * 8, "smem": 0.0, "ici": 0.0})

@@ -1,0 +1,109 @@
+"""Interference-aware colocation planner (paper §5.1).
+
+Given workload profiles with SLOs, the planner:
+  1. builds the pairwise predicted-slowdown matrix with the estimator
+     (per-kernel granularity -> workload-level aggregation),
+  2. greedily pairs workloads to maximize packed throughput subject to
+     every member staying within its SLO slowdown,
+  3. optionally allocates slot partitions (the green-context analogue:
+     disjoint chip/core fractions) when full-device sharing violates an
+     SLO but partitioned sharing does not — trading marginal per-workload
+     performance for colocation opportunity (paper §5.3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.estimator import estimate, workload_slowdown
+from repro.core.profile import KernelProfile, WorkloadProfile
+from repro.core.resources import DeviceModel
+
+
+@dataclass
+class Placement:
+    workloads: List[str]
+    slot_fraction: Dict[str, float]
+    predicted_slowdown: Dict[str, float]
+    meets_slo: bool
+    throughput_gain: float       # vs running members serially
+
+    def __repr__(self):
+        mems = " + ".join(self.workloads)
+        slow = ", ".join(f"{k}:{v:.2f}x" for k, v in self.predicted_slowdown.items())
+        return (f"<Placement [{mems}] slow=({slow}) "
+                f"gain={self.throughput_gain:.2f} slo_ok={self.meets_slo}>")
+
+
+def _rep_kernel(w: WorkloadProfile, dev: DeviceModel) -> KernelProfile:
+    """Time-weighted aggregate kernel used for quick pair screening."""
+    u = w.mixed_utilization(dev)
+    t = w.total_time(dev)
+    return KernelProfile(w.name, demand={
+        r: u[r] * dev.capacity(r) * t for r in u})
+
+
+def evaluate_pair(a: WorkloadProfile, b: WorkloadProfile, dev: DeviceModel,
+                  slot_fraction: Optional[Dict[str, float]] = None
+                  ) -> Placement:
+    ra = workload_slowdown(a, [_rep_kernel(b, dev)], dev, slot_fraction)
+    rb = workload_slowdown(b, [_rep_kernel(a, dev)], dev, slot_fraction)
+    slows = {a.name: ra, b.name: rb}
+    ta, tb = a.total_time(dev), b.total_time(dev)
+    serial = ta + tb
+    colocated = max(ta * ra, tb * rb)
+    gain = serial / max(colocated, 1e-12)
+    return Placement([a.name, b.name], slot_fraction or {}, slows,
+                     ra <= a.slo_slowdown and rb <= b.slo_slowdown, gain)
+
+
+def evaluate_pair_partitioned(a: WorkloadProfile, b: WorkloadProfile,
+                              dev: DeviceModel,
+                              fractions: Sequence[float] = (0.25, 0.5, 0.75)
+                              ) -> Placement:
+    """Try full sharing first, then slot partitions (green contexts)."""
+    best = evaluate_pair(a, b, dev)
+    if best.meets_slo:
+        return best
+    for f in fractions:
+        cand = evaluate_pair(a, b, dev, {a.name: f, b.name: 1.0 - f})
+        if cand.meets_slo and cand.throughput_gain > (best.throughput_gain
+                                                      if best.meets_slo else 0):
+            best = cand
+    return best
+
+
+@dataclass
+class Plan:
+    placements: List[Placement]
+    solo: List[str]
+
+    @property
+    def total_gain(self) -> float:
+        n_works = sum(len(p.workloads) for p in self.placements) + len(self.solo)
+        packed = len(self.placements) + len(self.solo)
+        return n_works / max(packed, 1)
+
+
+def plan_colocation(workloads: Sequence[WorkloadProfile], dev: DeviceModel,
+                    allow_partition: bool = True) -> Plan:
+    """Greedy max-gain SLO-feasible pairing."""
+    remaining = {w.name: w for w in workloads}
+    placements: List[Placement] = []
+    while len(remaining) >= 2:
+        names = list(remaining)
+        best: Optional[Placement] = None
+        for i in range(len(names)):
+            for j in range(i + 1, len(names)):
+                a, b = remaining[names[i]], remaining[names[j]]
+                p = (evaluate_pair_partitioned(a, b, dev) if allow_partition
+                     else evaluate_pair(a, b, dev))
+                if p.meets_slo and (best is None
+                                    or p.throughput_gain > best.throughput_gain):
+                    best = p
+        if best is None or best.throughput_gain <= 1.0:
+            break
+        placements.append(best)
+        for n in best.workloads:
+            remaining.pop(n)
+    return Plan(placements, sorted(remaining))

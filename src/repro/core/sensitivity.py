@@ -1,0 +1,80 @@
+"""Sensitivity quantification — the paper's §4 methodology as a library.
+
+For a workload kernel K and each resource axis r, colocate K with a
+calibrated stressor that consumes intensity lambda on r (and nothing
+else), sweep lambda in [0, 1], and record K's predicted slowdown. The
+resulting per-axis curves are the workload's *interference fingerprint*:
+the multi-dimensional replacement for occupancy/arithmetic-intensity
+scalars (pitfalls 1-2).
+
+On real hardware the same sweep runs the Pallas stressor kernels
+(repro.kernels.stressors) next to the workload; here the estimator
+provides the predicted curves, and benchmarks/ validates the estimator
+against the paper's measured GPU numbers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence
+
+from repro.core.estimator import estimate
+from repro.core.profile import KernelProfile
+from repro.core.resources import RESOURCE_AXES, DeviceModel
+
+
+def stressor(axis: str, intensity: float, dev: DeviceModel,
+             working_set: float = 0.0) -> KernelProfile:
+    """Synthetic kernel consuming `intensity` of axis capacity.
+
+    Maps 1:1 to the Pallas microbenchmarks: mxu -> stress_mxu, vpu/issue
+    -> stress_vpu(ilp), hbm/l2 -> stress_hbm, smem -> stress_vmem.
+    """
+    demand = {r: 0.0 for r in RESOURCE_AXES}
+    demand[axis] = intensity * dev.capacity(axis)
+    # duration=1: the stressor occupies exactly `intensity` of the axis
+    return KernelProfile(f"stress:{axis}:{intensity:.2f}", demand=demand,
+                         duration=1.0, cache_working_set=working_set)
+
+
+@dataclass
+class SensitivityReport:
+    kernel: str
+    curves: Dict[str, List[float]]       # axis -> slowdown per lambda
+    lambdas: List[float]
+    scores: Dict[str, float]             # axis -> slowdown at lambda=0.9
+
+    def ranked(self) -> List[str]:
+        return sorted(self.scores, key=lambda a: -self.scores[a])
+
+    def dominant(self) -> str:
+        return self.ranked()[0]
+
+
+def sensitivity(kernel: KernelProfile, dev: DeviceModel,
+                lambdas: Sequence[float] = (0.1, 0.25, 0.5, 0.75, 0.9),
+                axes: Sequence[str] = RESOURCE_AXES) -> SensitivityReport:
+    curves: Dict[str, List[float]] = {}
+    for axis in axes:
+        row = []
+        for lam in lambdas:
+            st = stressor(axis, lam, dev)
+            r = estimate([kernel, st], dev)
+            row.append(r.slowdown(kernel.name))
+        curves[axis] = row
+    scores = {a: curves[a][-1] for a in axes}
+    return SensitivityReport(kernel.name, curves, list(lambdas), scores)
+
+
+def cache_pollution_curve(kernel: KernelProfile, dev: DeviceModel,
+                          polluter_ws: Sequence[float]) -> List[float]:
+    """Paper Fig. 3: slowdown of `kernel` vs a polluter's working set."""
+    out = []
+    for ws in polluter_ws:
+        pol = KernelProfile(
+            "polluter",
+            demand={**{r: 0.0 for r in RESOURCE_AXES},
+                    "hbm": dev.hbm_bw * 0.5, "l2": dev.l2_bw * 0.5},
+            cache_working_set=ws, cache_hit_fraction=1.0)
+        r = estimate([kernel, pol], dev)
+        out.append(r.slowdown(kernel.name))
+    return out

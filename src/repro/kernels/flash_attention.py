@@ -1,0 +1,109 @@
+"""Pallas TPU flash attention (forward) with GQA, causal/local masks.
+
+Layout: q (BH, S, D) with BH = B * n_heads flattened; k/v (BKV, T, D).
+Grid: (BH, n_q_blocks, n_kv_blocks) — the kv dimension is the minor,
+sequential grid axis; m/l/acc live in VMEM scratch and persist across kv
+steps (the standard TPU revisiting-output pattern). Block shapes are
+(1, block_q, D) / (1, block_k, D): MXU-aligned when block_* are multiples
+of 128 and D ∈ {64, 80, 128, 256}.
+
+The pure-jnp oracle is ``repro.kernels.ref.ref_flash_attention``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, kind: str, window: int, block_q: int,
+            block_k: int, n_kv_blocks: int, seq_q: int, seq_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                                   # (bq, D)
+    k = k_ref[0]                                   # (bk, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    ok = (q_pos < seq_q) & (k_pos < seq_k)
+    if kind == "causal":
+        ok &= k_pos <= q_pos
+    elif kind == "local":
+        ok &= (k_pos <= q_pos) & (k_pos > q_pos - window)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p.astype(v_ref.dtype), v_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, kind: str = "causal", window: int = 0,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False) -> jnp.ndarray:
+    """q: (BH, S, D); k/v: (BKV, T, D). GQA: BH = BKV * group."""
+    BH, S, D = q.shape
+    BKV, T, _ = k.shape
+    group = BH // BKV
+    scale = 1.0 / math.sqrt(D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    nq = -(-S // block_q)
+    nk = -(-T // block_k)
+    pad_q = nq * block_q - S
+    pad_k = nk * block_k - T
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+
+    kernel = functools.partial(
+        _kernel, scale=scale, kind=kind, window=window, block_q=block_q,
+        block_k=block_k, n_kv_blocks=nk, seq_q=S, seq_k=T)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, iq, ik, g=group: (bh // g, ik, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, iq, ik, g=group: (bh // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nq * block_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]

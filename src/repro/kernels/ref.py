@@ -1,0 +1,109 @@
+"""Pure-jnp oracles for every Pallas kernel (the NCU-replay analogue:
+deterministic reference semantics the kernels are validated against)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_flash_attention(q, k, v, kind: str = "causal", window: int = 0):
+    """q (BH,S,D); k/v (BKV,T,D); GQA group = BH // BKV."""
+    BH, S, D = q.shape
+    BKV, T, _ = k.shape
+    g = BH // BKV
+    qg = q.reshape(BKV, g, S, D)
+    s = jnp.einsum("bgsd,btd->bgst", qg, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    qp, kp = jnp.arange(S)[:, None], jnp.arange(T)[None, :]
+    if kind == "causal":
+        ok = kp <= qp
+    elif kind == "local":
+        ok = (kp <= qp) & (kp > qp - window)
+    else:
+        ok = jnp.ones((S, T), bool)
+    s = jnp.where(ok, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgst,btd->bgsd", w.astype(v.dtype), v)
+    return o.reshape(BH, S, D)
+
+
+def ref_flash_decode(q, k, v, kv_len):
+    """q (BKV,G,D); k/v (BKV,T,D); kv_len (BKV,)."""
+    BKV, G, D = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bgd,btd->bgt", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    ok = jnp.arange(T)[None, None, :] < kv_len[:, None, None]
+    s = jnp.where(ok, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgt,btd->bgd", w.astype(v.dtype), v)
+
+
+def ref_ssm_scan(x, dt, A, B, C):
+    """Sequential-oracle mamba1 scan. x/dt (Bb,S,di); A (di,N); B/C (Bb,S,N)."""
+    Bb, S, di = x.shape
+    N = A.shape[1]
+
+    def step(h, t):
+        dA = jnp.exp(dt[:, t][..., None] * A)
+        dBx = (dt[:, t] * x[:, t].astype(jnp.float32))[..., None] * B[:, t][:, None, :].astype(jnp.float32)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, C[:, t].astype(jnp.float32))
+        return h, y
+
+    _, ys = jax.lax.scan(step, jnp.zeros((Bb, di, N), jnp.float32),
+                         jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def ref_rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------- stressor oracles --------------------------- #
+def ref_stress_mxu(a, b, iters: int):
+    def body(_, c):
+        c = jax.lax.dot_general(c, b, (((2,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        m = jnp.max(jnp.abs(c), axis=(1, 2), keepdims=True)
+        return c / jnp.maximum(m, 1.0)
+
+    c = jax.lax.fori_loop(0, iters, body, a.astype(jnp.float32))
+    return c.astype(a.dtype)
+
+
+def ref_stress_vpu(x, iters: int, ilp: int):
+    xf = x.astype(jnp.float32)
+    accs = tuple(xf + i for i in range(ilp))
+
+    def body(_, accs):
+        return tuple(a * 1.000001 + 0.5 for a in accs)
+
+    accs = jax.lax.fori_loop(0, iters, body, accs)
+    out = accs[0]
+    for a in accs[1:]:
+        out = out + a
+    return (out / (ilp * 4.0)).astype(x.dtype)
+
+
+def ref_stress_hbm(x):
+    return x
+
+
+def ref_stress_vmem(x, iters: int, stride: int, block_rows: int = 512):
+    R = x.shape[0]
+    br = min(block_rows, R)
+
+    def per_block(xb):
+        def body(_, y):
+            return y + jnp.roll(y, stride, 0)
+
+        y = jax.lax.fori_loop(0, iters, body, xb.astype(jnp.float32))
+        return (y / (2.0 ** iters)).astype(x.dtype)
+
+    blocks = x.reshape(R // br, br, x.shape[1])
+    return jax.vmap(per_block)(blocks).reshape(x.shape)

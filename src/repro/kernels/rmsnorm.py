@@ -1,0 +1,36 @@
+"""Pallas TPU fused RMSNorm kernel (rows blocked into VMEM)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                # (br, d)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * s_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, scale, eps: float = 1e-6, block_rows: int = 256,
+                   interpret: bool = False) -> jnp.ndarray:
+    """x: (R, d) (flatten leading dims first); scale: (d,)."""
+    R, d = x.shape
+    block_rows = min(block_rows, R)
+    pad = (-R) % block_rows
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    n = (R + pad) // block_rows
+    out = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R + pad, d), x.dtype),
+        interpret=interpret,
+    )(x, scale)
+    return out[:R]

@@ -1,0 +1,80 @@
+"""Pallas TPU selective-scan (Mamba-1) kernel.
+
+TPU adaptation of the fused CUDA selective scan: the expanded state
+h (bd, N) stays resident in VMEM scratch across sequence chunks (the grid's
+sequential minor axis), while x/dt/B/C stream HBM->VMEM chunk by chunk.
+This avoids ever materializing the (S, d_inner, N) tensor in HBM — the
+exact analogue of keeping h in registers/SMEM on GPU.
+
+Grid: (B, n_d_blocks, n_chunks); chunks sequential.
+Blocks: x/dt (1, chunk, bd); B/C (1, chunk, N); y (1, chunk, bd);
+scratch h (bd, N) f32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+            chunk: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = a_ref[...]                                    # (bd, N) f32
+    x = x_ref[0].astype(jnp.float32)                  # (chunk, bd)
+    dt = dt_ref[0].astype(jnp.float32)                # (chunk, bd)
+    Bm = b_ref[0].astype(jnp.float32)                 # (chunk, N)
+    Cm = c_ref[0].astype(jnp.float32)                 # (chunk, N)
+
+    def step(t, carry):
+        h, ys = carry
+        dA = jnp.exp(dt[t][:, None] * A)              # (bd, N)
+        dBx = (dt[t] * x[t])[:, None] * Bm[t][None, :]
+        h = dA * h + dBx
+        y_t = jnp.sum(h * Cm[t][None, :], axis=1)     # (bd,)
+        ys = jax.lax.dynamic_update_slice_in_dim(ys, y_t[None, :], t, 0)
+        return h, ys
+
+    h0 = h_ref[...]
+    ys0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h0, ys0))
+    h_ref[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)
+
+
+def ssm_scan_pallas(x, dt, A, B, C, *, chunk: int = 64, block_d: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """x, dt: (Bb, S, di); A: (di, N) (negative reals); B, C: (Bb, S, N).
+    Returns y (Bb, S, di) f32-accumulated, cast to x.dtype."""
+    Bb, S, di = x.shape
+    N = A.shape[1]
+    chunk = min(chunk, S)
+    block_d = min(block_d, di)
+    assert S % chunk == 0, "pad sequence to a chunk multiple"
+    assert di % block_d == 0
+    nc = S // chunk
+    nd = di // block_d
+    kernel = functools.partial(_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(Bb, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((block_d, N), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, block_d), lambda b, d, c: (b, c, d)),
+        out_shape=jax.ShapeDtypeStruct((Bb, S, di), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), B, C)

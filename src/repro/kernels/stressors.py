@@ -1,0 +1,139 @@
+"""TPU-native resource-stressor microbenchmark kernels — the paper's
+custom CUDA benchmark suite (§4.1) adapted per DESIGN.md §2:
+
+  stress_mxu    — repeated MXU matmuls on a VMEM-resident tile; tunable
+                  `iters` = arithmetic intensity (paper's "compute kernel").
+  stress_vpu    — independent element-wise FMA chains; tunable `ilp`
+                  mirrors the paper's S1..S4 ILP sweep (issue/IPC stressor).
+  stress_hbm    — streaming copy of a large array through VMEM (paper's
+                  "copy kernel"; HBM-bandwidth stressor).
+  stress_vmem   — strided VMEM load/store loop: sublane-strided rolls
+                  serialize vector accesses (bank-conflict analogue).
+
+Each returns a checkable value so the interpret-mode oracle tests in
+tests/test_kernels_stressors.py can assert numerics, and each has an
+analytic resource-demand vector in ``repro.core.sensitivity`` used by the
+interference estimator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# --------------------------------------------------------------------- #
+#  MXU stressor                                                          #
+# --------------------------------------------------------------------- #
+def _mxu_kernel(a_ref, b_ref, o_ref, *, iters: int):
+    a = a_ref[0]
+    b = b_ref[...]
+
+    def body(_, c):
+        c = jax.lax.dot(c, b, preferred_element_type=jnp.float32)
+        return c / jnp.maximum(jnp.max(jnp.abs(c)), 1.0)   # keep bounded
+
+    c = jax.lax.fori_loop(0, iters, body, a.astype(jnp.float32))
+    o_ref[0] = c.astype(o_ref.dtype)
+
+
+def stress_mxu(a, b, iters: int = 64, interpret: bool = False):
+    """a: (n_tiles, T, T); b: (T, T). FLOPs = n_tiles * iters * 2*T^3."""
+    n, T, _ = a.shape
+    return pl.pallas_call(
+        functools.partial(_mxu_kernel, iters=iters),
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, T, T), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((T, T), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((1, T, T), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, b)
+
+
+# --------------------------------------------------------------------- #
+#  VPU / issue stressor (ILP sweep)                                      #
+# --------------------------------------------------------------------- #
+def _vpu_kernel(x_ref, o_ref, *, iters: int, ilp: int):
+    x = x_ref[...].astype(jnp.float32)
+
+    def body(_, accs):
+        # `ilp` independent FMA chains — mirrors the paper's S1..S4
+        return tuple(a * 1.000001 + 0.5 for a in accs)
+
+    accs = tuple(x + i for i in range(ilp))
+    accs = jax.lax.fori_loop(0, iters, body, accs)
+    out = accs[0]
+    for a in accs[1:]:
+        out = out + a
+    o_ref[...] = (out / (ilp * 4.0)).astype(o_ref.dtype)
+
+
+def stress_vpu(x, iters: int = 256, ilp: int = 4, interpret: bool = False):
+    """x: (R, 128·k). VPU-flops = R*cols*iters*ilp*2."""
+    R, C = x.shape
+    br = min(256, R)
+    assert R % br == 0
+    return pl.pallas_call(
+        functools.partial(_vpu_kernel, iters=iters, ilp=ilp),
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+# --------------------------------------------------------------------- #
+#  HBM bandwidth stressor (streaming copy)                               #
+# --------------------------------------------------------------------- #
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def stress_hbm(x, block_rows: int = 1024, interpret: bool = False):
+    """Pure streaming copy HBM->VMEM->HBM. bytes = 2 * x.nbytes."""
+    R, C = x.shape
+    block_rows = min(block_rows, R)
+    assert R % block_rows == 0
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(R // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+# --------------------------------------------------------------------- #
+#  VMEM strided-access stressor (bank-conflict analogue)                 #
+# --------------------------------------------------------------------- #
+def _vmem_kernel(x_ref, o_ref, *, iters: int, stride: int):
+    x = x_ref[...]
+
+    def body(_, y):
+        # sublane-strided roll: stride 1 = conflict-free layout;
+        # larger strides force cross-sublane shuffles every access.
+        return y + jnp.roll(y, stride, 0)
+
+    y = jax.lax.fori_loop(0, iters, body, x.astype(jnp.float32))
+    o_ref[...] = (y / (2.0 ** iters)).astype(o_ref.dtype)
+
+
+def stress_vmem(x, iters: int = 64, stride: int = 8, interpret: bool = False):
+    """x: (R, 128·k). In-VMEM strided traffic = iters * 2 * block bytes."""
+    R, C = x.shape
+    br = min(512, R)
+    assert R % br == 0
+    return pl.pallas_call(
+        functools.partial(_vmem_kernel, iters=iters, stride=stride),
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

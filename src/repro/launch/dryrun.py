@@ -1,0 +1,287 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# post-SPMD pre-backend HLO dump: the CPU backend upcasts bf16->f32 and
+# refuses bf16 collectives, so executed-bytes accounting reads the
+# after_spmd-partitioning snapshot where dtypes are still faithful to TPU.
+_XDUMP = "/tmp/repro_xdump"
+os.environ["XLA_FLAGS"] += (
+    f" --xla_dump_to={_XDUMP} --xla_dump_hlo_pass_re=spmd-partitioning")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct stand-ins (no allocation), dump memory/cost analysis and
+HLO-derived collective traffic to results/dryrun/*.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+
+import argparse
+import glob
+import json
+import shutil
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig, SHAPES, supports_shape
+from repro.configs.registry import get_config, list_archs, valid_cells
+from repro.core import hlo as hlo_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.moe import ParallelContext
+from repro.parallel import sharding as shd
+from repro.train.optimizer import get_optimizer
+from repro.train.trainer import make_train_step
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# ----------------------------------------------------------------- #
+#  Per-cell run configuration (hillclimb overrides live here)       #
+# ----------------------------------------------------------------- #
+def default_run(cfg, shape, n_data_shards: int = 16) -> RunConfig:
+    from repro.launch.perf_overrides import PERF_OVERRIDES
+    key = (cfg.name, shape.name)
+    if key in PERF_OVERRIDES:
+        return PERF_OVERRIDES[key]
+    if shape.kind == "train":
+        big = cfg.n_params() > 30e9
+        mb = 16 if big else 4
+        mb = max(1, min(mb, shape.global_batch // max(n_data_shards, 1)))
+        return RunConfig(
+            num_microbatches=mb,
+            optimizer="adafactor" if cfg.n_params() > 100e9 else "adamw",
+        )
+    return RunConfig(num_microbatches=1)
+
+
+def input_specs(cfg, shape, model):
+    """ShapeDtypeStruct stand-ins for every model input (weak-type-correct,
+    shardable, no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch = {}
+        if cfg.family == "audio":
+            batch["frames"] = f((B, S, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = f((B, S), jnp.int32)
+        batch["labels"] = f((B, S), jnp.int32)
+        if cfg.family == "vlm":
+            batch["vision"] = f((B, cfg.n_vision_tokens, cfg.d_vision),
+                                jnp.bfloat16)
+        if shape.kind == "prefill":
+            batch.pop("labels")
+        return batch
+    # decode: one new token against a full cache
+    tokens = f((B, 1), jnp.int32)
+    cache = model.init_cache(B, S, abstract=True)
+    pos = f((), jnp.int32)
+    return {"tokens": tokens, "cache": cache, "pos": pos}
+
+
+def _tree_bytes(tree) -> int:
+    return sum(np.prod(l.shape) * l.dtype.itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def _read_spmd_dump() -> str:
+    """Newest after_spmd-partitioning dump (cleared per compile)."""
+    files = glob.glob(f"{_XDUMP}/*after_spmd-partitioning*.txt")
+    if not files:
+        return ""
+    newest = max(files, key=os.path.getmtime)
+    return Path(newest).read_text()
+
+
+def _clear_spmd_dump():
+    shutil.rmtree(_XDUMP, ignore_errors=True)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             run: RunConfig | None = None, save: bool = True,
+             mesh=None, tag: str = "", keep_dump: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not supports_shape(cfg, shape):
+        return {"arch": arch, "shape": shape_name, "skipped": True}
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    data_axes = shd.data_axes_of(mesh)
+    n_data = int(np.prod([mesh.shape[a] for a in data_axes]))
+    run = run or default_run(cfg, shape, n_data)
+    cfg = cfg.with_overrides(attn_impl="flashref",
+                             remat_policy=run.remat_policy or cfg.remat_policy,
+                             layer_group=run.layer_group or cfg.layer_group)
+    recipe = run.sharding_recipe
+    if recipe == "auto":
+        recipe = shd.pick_recipe(cfg, shape)
+    ctx = ParallelContext(mesh, data_axes, "model",
+                          feature_shard_decode=(recipe == "tp2d_serve"))
+    model = build_model(cfg)
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(cfg, recipe, mesh, params_shape)
+    psh = shd.named(mesh, pspecs)
+    ins = input_specs(cfg, shape, model)
+
+    t0 = time.perf_counter()
+    if shape.kind == "train":
+        opt = get_optimizer(run.optimizer)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        ospecs = shd.param_specs(cfg, recipe, mesh, opt_shape)
+        osh = shd.named(mesh, ospecs)
+        bspecs = shd.sanitize_tree(
+            {k: shd.batch_specs(cfg, recipe, mesh, "train").get(
+                k, jax.sharding.PartitionSpec(data_axes, None))
+             for k in ins}, ins, mesh)
+        bsh = shd.named(mesh, bspecs)
+        step = make_train_step(model, opt, run, ctx)
+        jitted = jax.jit(step, in_shardings=(psh, osh, bsh),
+                         out_shardings=(psh, osh, None))
+        lowered = jitted.lower(params_shape, opt_shape, ins)
+    elif shape.kind == "prefill":
+        if cfg.is_encoder:
+            def step(params, batch):
+                return model.forward(params, batch, ctx)[0]
+        else:
+            def step(params, batch):
+                return model.prefill(params, batch, shape.seq_len, ctx)
+        bspecs = shd.sanitize_tree(
+            {k: v for k, v in shd.batch_specs(cfg, recipe, mesh,
+                                              "prefill").items() if k in ins},
+            ins, mesh)
+        bsh = shd.named(mesh, bspecs)
+        out_sh = None
+        if not cfg.is_encoder:
+            # the produced KV cache must leave the step SHARDED (batch over
+            # data, sequence over model) — otherwise XLA replicates it
+            out_shape = jax.eval_shape(step, params_shape, ins)
+            ospec = (None, shd.named(mesh, shd.cache_specs(
+                cfg, recipe, mesh, out_shape[1])))
+            out_sh = ospec
+        jitted = jax.jit(step, in_shardings=(psh, bsh), out_shardings=out_sh)
+        lowered = jitted.lower(params_shape, ins)
+    else:  # decode
+        def step(params, tokens, cache, pos):
+            return model.decode_step(params, tokens, cache, pos, ctx)
+
+        tok_spec = shd.sanitize(jax.sharding.PartitionSpec(data_axes),
+                                ins["tokens"].shape, mesh)
+        cspecs = shd.cache_specs(cfg, recipe, mesh, ins["cache"])
+        csh = shd.named(mesh, cspecs)
+        # donate the cache: the serving engine updates it in place, so the
+        # dry-run memory analysis must reflect input/output aliasing
+        jitted = jax.jit(step, in_shardings=(
+            psh, shd.named(mesh, tok_spec), csh, None),
+            out_shardings=(None, csh), donate_argnums=(2,))
+        lowered = jitted.lower(params_shape, ins["tokens"], ins["cache"],
+                               ins["pos"])
+    t_lower = time.perf_counter() - t0
+
+    _clear_spmd_dump()
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    spmd_text = _read_spmd_dump()
+    final_text = compiled.as_text()
+    stats = hlo_mod.analyze(spmd_text if spmd_text else final_text)
+    final_stats = hlo_mod.analyze(final_text)
+    if not keep_dump:
+        _clear_spmd_dump()
+
+    result = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": dict(mesh.shape), "n_chips": n_chips,
+        "recipe": recipe, "multi_pod": multi_pod, "tag": tag,
+        "run": {"num_microbatches": run.num_microbatches,
+                "optimizer": run.optimizer,
+                "remat": run.remat_policy or cfg.remat_policy,
+                "recipe": recipe},
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+        "lower_s": t_lower, "compile_s": t_compile,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        },
+        "cost": {"flops": float(cost.get("flops", -1)),
+                 "bytes_accessed": float(cost.get("bytes accessed", -1)),
+                 "transcendentals": float(cost.get("transcendentals", -1))},
+        # executed-counts (while bodies multiplied by trip count) per device
+        # primary: after_spmd HLO (bf16-faithful, fusion-optimistic bytes);
+        # boundary: final backend HLO (fusion-boundary bytes, f32-upcast)
+        "hlo_exec": {"mxu_flops": stats.mxu_flops,
+                     "vpu_flops": stats.vpu_flops,
+                     "transcendentals": stats.transcendentals,
+                     "hbm_bytes": stats.hbm_bytes,
+                     "hbm_bytes_boundary": final_stats.hbm_bytes,
+                     "source": "after_spmd" if spmd_text else "final"},
+        "collectives": {"bytes_by_kind": stats.coll_bytes_by_kind,
+                        "count_by_kind": stats.coll_count_by_kind,
+                        "total_bytes": stats.collective_bytes},
+        "hlo_size_chars": len(final_text),
+    }
+    if save:
+        RESULTS.mkdir(parents=True, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+        fname += (f"__{tag}" if tag else "") + ".json"
+        (RESULTS / fname).write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells = (valid_cells() if args.all
+             else [(args.arch, args.shape)])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    ok = fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            fname = (RESULTS / f"{arch}__{shape}__"
+                     f"{'pod2' if mp else 'pod1'}"
+                     f"{'__' + args.tag if args.tag else ''}.json")
+            if args.skip_done and fname.exists():
+                print(f"SKIP {arch} {shape} mp={mp}")
+                continue
+            try:
+                t0 = time.perf_counter()
+                r = run_cell(arch, shape, multi_pod=mp, tag=args.tag)
+                dt = time.perf_counter() - t0
+                if r.get("skipped"):
+                    continue
+                print(f"OK   {arch:28s} {shape:12s} mp={int(mp)} "
+                      f"compile={r['compile_s']:6.1f}s total={dt:6.1f}s "
+                      f"flops/dev={r['cost']['flops']:.3g} "
+                      f"coll={r['collectives']['total_bytes']:.3g}B")
+                ok += 1
+            except Exception as e:
+                fail += 1
+                print(f"FAIL {arch:28s} {shape:12s} mp={int(mp)}: {e}")
+                traceback.print_exc()
+    print(f"\ndry-run: {ok} ok, {fail} failed")
+    raise SystemExit(1 if fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+_XDUMP = "/tmp/repro_xdump"
+os.environ["XLA_FLAGS"] += (
+    f" --xla_dump_to={_XDUMP} --xla_dump_hlo_pass_re=spmd-partitioning")
+
+"""Perf-iteration profiler: lower one cell and print the top HBM / FLOPs /
+collective contributors from the executed-HLO accounting (the dry-run
+analogue of `ncu --print-summary`). Drives the §Perf hypothesis loop.
+
+  PYTHONPATH=src python -m repro.launch.inspect_cell --arch falcon-mamba-7b \\
+      --shape train_4k [--microbatches 8] [--recipe fsdp_tp]
+"""
+
+import argparse
+import re
+from collections import defaultdict
+
+from repro.core import hlo
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--recipe", default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--optimizer", default=None)
+    ap.add_argument("--topk", type=int, default=12)
+    args = ap.parse_args()
+
+    from repro.configs.base import RunConfig, SHAPES
+    from repro.configs.registry import get_config
+    from repro.launch import dryrun as dr
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    run = dr.default_run(cfg, shape)
+    kw = {}
+    if args.microbatches:
+        kw["num_microbatches"] = args.microbatches
+    if args.recipe:
+        kw["sharding_recipe"] = args.recipe
+    if args.remat:
+        kw["remat_policy"] = args.remat
+    if args.optimizer:
+        kw["optimizer"] = args.optimizer
+    if kw:
+        import dataclasses
+        run = dataclasses.replace(run, **kw)
+
+    # run the cell but keep the spmd dump for deep analysis
+    dr._clear_spmd_dump()
+    rec = dr.run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                      run=run, save=False)
+    print(f"\n=== {args.arch} {args.shape} recipe={rec['recipe']} "
+          f"mb={run.num_microbatches} remat={run.remat_policy} ===")
+    h = rec["hlo_exec"]
+    dev_tf, hbm_bw, ici = 197e12, 819e9, 50e9 * 1.5
+    print(f"compute {h['mxu_flops'] / dev_tf * 1e3:9.1f} ms   "
+          f"memory {h['hbm_bytes'] / hbm_bw * 1e3:9.1f} ms   "
+          f"collective {rec['collectives']['total_bytes'] / ici * 1e3:9.1f} ms")
+    mem = rec["memory"]
+    print(f"HBM/chip: args {mem['argument_bytes'] / 1e9:.2f} GB  "
+          f"temp {mem['temp_bytes'] / 1e9:.2f} GB "
+          f"(CPU-f32-inflated; TPU-bf16 ~ /1.7)")
+
+    # deep per-op analysis needs the dump from the LAST compile; run_cell
+    # clears it, so re-lower once more without clearing:
+    import json
+    # Re-run with dump preserved
+    dr._clear_spmd_dump()
+    rec = dr.run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                      run=run, save=False, keep_dump=True)
+    text = dr._read_spmd_dump()
+    mod = hlo.parse_module(text)
+
+    def meta(i):
+        m = re.search(r'op_name="([^"]*)"', i.attrs or "")
+        return (m.group(1)[-70:] if m else i.opcode)
+
+    hbm_by, flop_by, coll_by = (defaultdict(float) for _ in range(3))
+    for m, cname, i in mod.executed():
+        base = i.opcode.replace("-start", "")
+        key = f"{i.opcode[:14]:14s} {meta(i)}"
+        if base in hlo.COLLECTIVES and not i.opcode.endswith("-done"):
+            ob = sum(mod.table[o].result_bytes for o in i.operands
+                     if o in mod.table)
+            coll_by[key] += m * hlo._traffic(base, ob, i.result_bytes)
+        if i.opcode in ("dot", "convolution"):
+            flop_by[key] += m * hlo._dot_flops(i, mod.table)
+        if cname in mod.fusion_bodies or i.opcode in hlo._NO_TRAFFIC:
+            continue
+        if i.opcode in ("dynamic-slice", "slice", "gather"):
+            hbm_by[key] += m * 2 * i.result_bytes
+        elif i.opcode in ("dynamic-update-slice", "scatter"):
+            upd = (mod.table[i.operands[1]].result_bytes
+                   if len(i.operands) > 1 and i.operands[1] in mod.table
+                   else i.result_bytes)
+            hbm_by[key] += m * 2 * upd
+        elif i.opcode in ("dot", "convolution", "reduce", "sort"):
+            ob = sum(mod.table[o].result_bytes for o in i.operands
+                     if o in mod.table)
+            hbm_by[key] += m * (ob + i.result_bytes)
+
+    for title, d, unit in (("HBM bytes", hbm_by, 1e9),
+                           ("MXU flops", flop_by, 1e12),
+                           ("collective bytes", coll_by, 1e9)):
+        tot = sum(d.values())
+        print(f"\n--- top {title} (total {tot / unit:.2f} "
+              f"{'GB' if unit == 1e9 else 'TF'}) ---")
+        for k, v in sorted(d.items(), key=lambda kv: -kv[1])[:args.topk]:
+            print(f"{v / unit:10.3f} ({v / max(tot, 1e-9) * 100:4.1f}%)  {k}")
+
+
+if __name__ == "__main__":
+    main()

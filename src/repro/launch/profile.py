@@ -1,0 +1,61 @@
+"""Interference-profile driver: build per-phase resource profiles of an
+architecture from its dry-run artifacts and print its sensitivity
+fingerprint + best colocation partners (the paper's methodology applied
+to the framework's own workloads).
+
+  PYTHONPATH=src python -m repro.launch.profile --arch llama3-405b
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.core import TPU_V5E, plan_colocation, sensitivity
+from repro.core.profile import WorkloadProfile, from_dryrun_json
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def load_profiles(arch: str = None, mesh_tag: str = "pod1"):
+    profs = []
+    for f in sorted(RESULTS.glob(f"*__{mesh_tag}.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("skipped"):
+            continue
+        if arch and rec["arch"] != arch:
+            continue
+        profs.append(from_dryrun_json(rec))
+    return profs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--plan", action="store_true",
+                    help="run the colocation planner over all phases")
+    args = ap.parse_args(argv)
+
+    profs = load_profiles(args.arch)
+    if not profs:
+        print("no dry-run artifacts found; run repro.launch.dryrun first")
+        return
+    print(f"{'phase':44s} {'bottleneck':11s} sensitivity fingerprint "
+          f"(slowdown @ 90% stressor)")
+    for p in profs:
+        rep = sensitivity(p, TPU_V5E)
+        fp = " ".join(f"{a}:{rep.scores[a]:.2f}" for a in rep.ranked()[:4])
+        print(f"{p.name:44s} {p.bottleneck(TPU_V5E):11s} {fp}")
+
+    if args.plan:
+        works = [WorkloadProfile(p.name, (p,), slo_slowdown=1.3)
+                 for p in profs]
+        plan = plan_colocation(works, TPU_V5E)
+        print("\ncolocation plan (SLO 1.3x):")
+        for pl in plan.placements:
+            print("  ", pl)
+        print("   solo:", plan.solo)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,375 @@
+"""GQA/MQA attention: reference oracle, flash-equivalent chunked (flashref),
+Pallas dispatch, decode over (possibly sequence-sharded) KV caches, and
+cross-attention for VLM layers.
+
+Shape conventions:
+  x        (B, S, d_model)
+  q        (B, S, H, D)
+  k, v     (B, T, KVH, D)
+  grouped  (B, S, KVH, G, D) with G = H // KVH
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.models.layers import Params, apply_rope, dense_init, l2norm
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- #
+#  Parameters                                                            #
+# --------------------------------------------------------------------- #
+def attn_init(key, a: AttentionConfig, d_model: int, d_kv_in: int = 0,
+              dtype=jnp.bfloat16) -> Params:
+    """Self-attention when d_kv_in == 0, else cross-attention (kv from
+    a different width, e.g. vision embeddings)."""
+    d_kv_in = d_kv_in or d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d_model, a.n_heads * a.head_dim, dtype),
+        "wk": dense_init(k2, d_kv_in, a.n_kv_heads * a.head_dim, dtype),
+        "wv": dense_init(k3, d_kv_in, a.n_kv_heads * a.head_dim, dtype),
+        "wo": dense_init(k4, a.n_heads * a.head_dim, d_model, dtype),
+    }
+    if a.qk_norm:
+        p["q_norm"] = jnp.ones((a.head_dim,), jnp.float32)
+        p["k_norm"] = jnp.ones((a.head_dim,), jnp.float32)
+    return p
+
+
+def cross_attn_init(key, a: AttentionConfig, d_model: int, d_vision: int,
+                    dtype=jnp.bfloat16) -> Params:
+    p = attn_init(key, a, d_model, d_kv_in=d_vision, dtype=dtype)
+    p["gate"] = jnp.zeros((), jnp.float32)   # tanh-gated residual (llama3.2)
+    return p
+
+
+def project_qkv(p: Params, a: AttentionConfig, x: jnp.ndarray,
+                kv_x: Optional[jnp.ndarray] = None,
+                positions: Optional[jnp.ndarray] = None,
+                rope: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    kv_x = x if kv_x is None else kv_x
+    B, S, _ = x.shape
+    T = kv_x.shape[1]
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, S, a.n_heads, a.head_dim)
+    k = jnp.einsum("btd,de->bte", kv_x, p["wk"]).reshape(B, T, a.n_kv_heads, a.head_dim)
+    v = jnp.einsum("btd,de->bte", kv_x, p["wv"]).reshape(B, T, a.n_kv_heads, a.head_dim)
+    if a.qk_norm:
+        q = l2norm(q) * p["q_norm"].astype(q.dtype)
+        k = l2norm(k) * p["k_norm"].astype(k.dtype)
+    if rope:
+        if positions is None:
+            positions = jnp.arange(S)[None, :]
+        q = apply_rope(q, positions, a.rope_theta)
+        k = apply_rope(k, positions, a.rope_theta)
+    return q, k, v
+
+
+# --------------------------------------------------------------------- #
+#  Masks                                                                 #
+# --------------------------------------------------------------------- #
+def _mask_bias(q_pos: jnp.ndarray, k_pos: jnp.ndarray, kind: str,
+               window: int) -> jnp.ndarray:
+    """(..., S, C) additive bias; q_pos (S,), k_pos (C,)."""
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    if kind == "bidirectional":
+        ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    elif kind == "causal":
+        ok = dk <= dq
+    elif kind == "local":
+        ok = (dk <= dq) & (dk > dq - window)
+    else:
+        raise ValueError(kind)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+#  Reference (oracle) attention                                          #
+# --------------------------------------------------------------------- #
+def _expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """GQA: repeat KV heads to full head count. Under SPMD this is the
+    sharding-friendly form — a grouped (KVH, G) reshape of a head-sharded
+    q is unrepresentable when KVH < the model-axis size and forces full
+    rematerialization; the repeat keeps every einsum head-sharded with
+    zero extra communication (k/v are replicated across the model axis)."""
+    KVH = k.shape[2]
+    if KVH == n_heads:
+        return k
+    # gather (not jnp.repeat): repeat's internal (KVH, G) reshape is itself
+    # unrepresentable under head sharding; a gather shards by index slice.
+    idx = jnp.arange(n_heads) // (n_heads // KVH)
+    return jnp.take(k, idx, axis=2)
+
+
+def reference_attention(q, k, v, kind: str = "causal", window: int = 0,
+                        softcap: float = 0.0) -> jnp.ndarray:
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    s = jnp.einsum("bshd,bthd->bhst", q, k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = s + _mask_bias(jnp.arange(S), jnp.arange(T), kind, window)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhst,bthd->bshd", w.astype(v.dtype), v)
+    return o.reshape(B, S, H, D)
+
+
+# --------------------------------------------------------------------- #
+#  flashref: chunked online-softmax attention (flash-equivalent HLO)     #
+# --------------------------------------------------------------------- #
+def _shard(x, ctx, *spec):
+    """with_sharding_constraint helper; drops axes that don't divide."""
+    if ctx is None or getattr(ctx, "mesh", None) is None:
+        return x
+    import numpy as _np
+    mesh = ctx.mesh
+    clean = []
+    for dim, ax in enumerate(spec):
+        if ax is None:
+            clean.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        size = int(_np.prod([mesh.shape[a] for a in axes]))
+        clean.append(ax if x.shape[dim] % size == 0 else None)
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec(*clean))
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def flashref_attention(q, k, v, kind: str = "causal", window: int = 0,
+                       chunk: int = 1024, softcap: float = 0.0,
+                       ctx=None) -> jnp.ndarray:
+    """Online-softmax over KV chunks via lax.scan; never materializes the
+    full (S, T) score matrix. Matches reference_attention to ~1e-3 (bf16).
+
+    GSPMD note: sharding propagation through the chunk-scan carry is weak,
+    so q/k/v and the carry inits carry explicit head-sharded constraints
+    (batch over data axes, heads over the model axis)."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    if ctx is not None and getattr(ctx, "mesh", None) is not None:
+        da, ma = ctx.data_axes, ctx.model_axis
+        q = _shard(q, ctx, da, None, ma, None)
+        k = _shard(k, ctx, da, None, ma, None)
+        v = _shard(v, ctx, da, None, ma, None)
+    chunk = min(chunk, T)
+    if T % chunk:                      # pad KV to a chunk multiple
+        pad = chunk - T % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = k.shape[1]
+    n = Tp // chunk
+    k_c = jnp.moveaxis(k.reshape(B, n, chunk, H, D), 1, 0)
+    v_c = jnp.moveaxis(v.reshape(B, n, chunk, H, D), 1, 0)
+    kpos_c = jnp.arange(Tp).reshape(n, chunk)
+    valid_c = (kpos_c < T)
+    q_pos = jnp.arange(S)
+    scale = 1.0 / math.sqrt(D)
+
+    def body(carry, inp):
+        m, l, o = carry                                    # (B,H,S) / (B,H,S,D)
+        kc, vc, kpos, valid = inp
+        s = jnp.einsum("bshd,bchd->bhsc", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        bias = _mask_bias(q_pos, kpos, kind, window)
+        bias = jnp.where(valid[None, :], bias, NEG_INF)
+        s = s + bias                                       # (B,H,S,C)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhsc,bchd->bhsd", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, H, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    o0 = jnp.zeros((B, H, S, D), jnp.float32)
+    if ctx is not None and getattr(ctx, "mesh", None) is not None:
+        da, ma = ctx.data_axes, ctx.model_axis
+        m0 = _shard(m0, ctx, da, ma, None)
+        l0 = _shard(l0, ctx, da, ma, None)
+        o0 = _shard(o0, ctx, da, ma, None, None)
+        k_c = _shard(k_c, ctx, None, da, None, ma, None)
+        v_c = _shard(v_c, ctx, None, da, None, ma, None)
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), (k_c, v_c, kpos_c, valid_c))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 1, 2)                          # (B,S,H,D)
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+#  Decode attention (one new token against a KV cache)                   #
+# --------------------------------------------------------------------- #
+def decode_attention(q, cache_k, cache_v, kv_len, q_pos=None,
+                     kind: str = "causal", window: int = 0,
+                     softcap: float = 0.0) -> jnp.ndarray:
+    """q: (B, 1, H, D); cache_{k,v}: (B, Smax, KVH, D); kv_len: () or (B,).
+
+    Works with ``Smax`` sequence-sharded across a mesh axis: the reductions
+    over T lower to cheap activation-sized partial-sum collectives
+    (flash-decode-style SP).
+    """
+    B, _, H, D = q.shape
+    T, KVH = cache_k.shape[1], cache_k.shape[2]
+    G = H // KVH
+    # GROUPED einsum, not KV expansion: with one query token the grouped
+    # reshape of q is a free reshard (q is ~MBs), while expanding the KV
+    # cache to H heads would re-materialize it G x (§Perf C1: 270GB ->
+    # 8GB per decode step for llama3-405b at 32k).
+    qg = q.reshape(B, KVH, G, D)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, cache_k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    kv_len = jnp.asarray(kv_len)
+    lens = kv_len[..., None] if kv_len.ndim else kv_len    # (B,1) or ()
+    tpos = jnp.arange(T)
+    ok = tpos[None, :] < jnp.broadcast_to(lens, (B, 1))    # (B, T)
+    if kind == "local" and window:
+        # ring-buffer local cache: all (< kv_len) slots valid; kv_len<=window
+        ok = ok & (tpos[None, :] >= jnp.broadcast_to(lens, (B, 1)) - window)
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", w.astype(cache_v.dtype), cache_v)
+    return o.reshape(B, 1, H, D)
+
+
+# --------------------------------------------------------------------- #
+#  Dispatch                                                              #
+# --------------------------------------------------------------------- #
+def run_attention(q, k, v, *, impl: str = "auto", kind: str = "causal",
+                  window: int = 0, chunk: int = 1024,
+                  softcap: float = 0.0, ctx=None) -> jnp.ndarray:
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "flashref"
+    if impl == "reference":
+        return reference_attention(q, k, v, kind, window, softcap)
+    if impl == "flashref":
+        return flashref_attention(q, k, v, kind, window, chunk, softcap, ctx)
+    if impl == "pallas":
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, kind=kind, window=window,
+                                   softcap=softcap)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def self_attention_block(p: Params, a: AttentionConfig, x: jnp.ndarray,
+                         *, kind: str, impl: str = "auto",
+                         chunk: int = 1024,
+                         positions: Optional[jnp.ndarray] = None,
+                         ctx=None
+                         ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full self-attn block (proj -> attn -> out proj). Returns (out, (k, v))
+    so prefill can populate the cache."""
+    q, k, v = project_qkv(p, a, x, positions=positions)
+    o = run_attention(q, k, v, impl=impl, kind=kind, window=a.local_window,
+                      chunk=chunk, softcap=a.softcap, ctx=ctx)
+    B, S = x.shape[:2]
+    out = jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1), p["wo"])
+    return out, (k, v)
+
+
+def cross_attention_block(p: Params, a: AttentionConfig, x: jnp.ndarray,
+                          vision: jnp.ndarray, impl: str = "auto",
+                          chunk: int = 1024, ctx=None) -> jnp.ndarray:
+    """Tanh-gated cross attention over (precomputed) vision tokens."""
+    q, k, v = project_qkv(p, a, x, kv_x=vision, rope=False)
+    o = run_attention(q, k, v, impl="flashref" if impl == "pallas" else impl,
+                      kind="bidirectional", chunk=chunk, ctx=ctx)
+    B, S = x.shape[:2]
+    out = jnp.einsum("bse,ed->bsd", o.reshape(B, S, -1), p["wo"])
+    return jnp.tanh(p["gate"]).astype(out.dtype) * out
+
+
+def chunk_attention(q, cache_k, cache_v, pos0, softcap: float = 0.0
+                    ) -> jnp.ndarray:
+    """Chunked-prefill attention: C new queries (absolute positions
+    pos0..pos0+C-1) over a cache whose first pos0+C slots are valid.
+    q: (B, C, H, D); cache_{k,v}: (B, Smax, KVH, D); pos0: scalar."""
+    B, C, H, D = q.shape
+    T, KVH = cache_k.shape[1], cache_k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, C, KVH, G, D)        # grouped: avoid expanding cache
+    s = jnp.einsum("bckgd,btkd->bkgct", qg, cache_k,
+                   preferred_element_type=jnp.float32) / math.sqrt(D)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = pos0 + jnp.arange(C)
+    ok = jnp.arange(T)[None, :] <= q_pos[:, None]        # causal (C, T)
+    s = s + jnp.where(ok, 0.0, NEG_INF)[None, None, None]
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgct,btkd->bckgd", w.astype(cache_v.dtype), cache_v)
+    return o.reshape(B, C, H, D)
+
+
+def extend_self_attention(p: Params, a: AttentionConfig, x: jnp.ndarray,
+                          cache_k, cache_v, pos0
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Chunked-prefill step for one self-attn block: project C tokens,
+    write their k/v at [pos0:pos0+C], attend over the whole prefix."""
+    B, C = x.shape[:2]
+    positions = jnp.broadcast_to(pos0 + jnp.arange(C)[None, :], (B, C))
+    q, k, v = project_qkv(p, a, x, positions=positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos0, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos0, axis=1)
+    o = chunk_attention(q, cache_k, cache_v, pos0, softcap=a.softcap)
+    out = jnp.einsum("bse,ed->bsd", o.reshape(B, C, -1), p["wo"])
+    return out, cache_k, cache_v
+
+
+def write_kv(cache: jnp.ndarray, new: jnp.ndarray, idx) -> jnp.ndarray:
+    """Write (B,1,KVH,D) into (B,Smax,KVH,D) at slot `idx` (scalar or (B,))."""
+    idx = jnp.asarray(idx)
+    if idx.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache, new.astype(cache.dtype),
+                                                   idx, axis=1)
+    return jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+            c, n.astype(c.dtype), i, axis=0))(cache, new, idx)
+
+
+def decode_self_attention(p: Params, a: AttentionConfig, x: jnp.ndarray,
+                          cache_k, cache_v, pos, *, kind: str = "causal"
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode step for a self-attention block.
+
+    x: (B, 1, d); cache_{k,v}: (B, Smax, KVH, D); pos: scalar or (B,) —
+    absolute position of the new token. Local layers use a ring buffer of
+    size `a.local_window` (write slot = pos % Smax, all warm slots valid).
+    Returns (block_out, cache_k, cache_v).
+    """
+    B = x.shape[0]
+    smax = cache_k.shape[1]
+    pos = jnp.asarray(pos)
+    positions = jnp.broadcast_to(pos.reshape(-1, 1) if pos.ndim else pos[None, None],
+                                 (B, 1))
+    q, k, v = project_qkv(p, a, x, positions=positions)
+    slot = positions[:, 0] % smax if kind == "local" else positions[:, 0]
+    if pos.ndim == 0:
+        slot = slot[0]
+    cache_k = write_kv(cache_k, k, slot)
+    cache_v = write_kv(cache_v, v, slot)
+    kv_len = jnp.minimum(positions[:, 0] + 1, smax)
+    o = decode_attention(q, cache_k, cache_v, kv_len,
+                         kind="causal" if kind == "local" else kind,
+                         softcap=a.softcap)
+    out = jnp.einsum("bse,ed->bsd", o.reshape(B, 1, -1), p["wo"])
+    return out, cache_k, cache_v

@@ -1,0 +1,211 @@
+"""SSM stacks (falcon-mamba) and hybrid stacks (zamba2: Mamba-2 backbone
+with one SHARED transformer block applied after every k SSM layers).
+
+Simplification vs. the zamba2 paper noted in DESIGN.md: the shared block
+here consumes the running hidden state directly (zamba2 concatenates the
+original embedding; we keep a single-width residual for scan uniformity).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm
+from repro.models.layers import Params, rmsnorm, rmsnorm_init
+from repro.models.moe import LOCAL_CTX, ParallelContext
+from repro.models.transformer import _remat, _stack_init, layer_decode, layer_fwd, layer_init
+
+Cache = Dict[str, Any]
+
+
+# --------------------------------------------------------------------- #
+#  One SSM residual layer                                                #
+# --------------------------------------------------------------------- #
+def ssm_layer_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    init = ssm.mamba1_init if cfg.ssm.variant == "mamba1" else ssm.mamba2_init
+    return {"ln": rmsnorm_init(cfg.d_model), "mixer": init(key, cfg, dtype)}
+
+
+def ssm_layer_fwd(lp: Params, cfg: ModelConfig, x: jnp.ndarray,
+                  ctx=None) -> jnp.ndarray:
+    fwd = ssm.mamba1_forward if cfg.ssm.variant == "mamba1" else ssm.mamba2_forward
+    return x + fwd(lp["mixer"], cfg, rmsnorm(lp["ln"], x, cfg.norm_eps),
+                   ctx=ctx)
+
+
+def ssm_layer_step(lp: Params, cfg: ModelConfig, x, state):
+    step = ssm.mamba1_step if cfg.ssm.variant == "mamba1" else ssm.mamba2_step
+    out, state = step(lp["mixer"], cfg, rmsnorm(lp["ln"], x, cfg.norm_eps), state)
+    return x + out, state
+
+
+def ssm_init_state(cfg: ModelConfig, batch: int):
+    init = (ssm.mamba1_init_state if cfg.ssm.variant == "mamba1"
+            else ssm.mamba2_init_state)
+    return init(cfg, batch)
+
+
+# ===================================================================== #
+#  Pure SSM stack (falcon-mamba)                                         #
+# ===================================================================== #
+def ssm_stack_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    return _stack_init(lambda k: ssm_layer_init(k, cfg, dtype), key, cfg.n_layers)
+
+
+def ssm_stack_fwd(sp: Params, cfg: ModelConfig, x, *, remat: str,
+                  unroll: int = 1, ctx=None):
+    def body(h, lp):
+        return ssm_layer_fwd(lp, cfg, h, ctx=ctx), None
+
+    x, _ = jax.lax.scan(_remat(body, remat), x, sp, unroll=unroll)
+    return x, jnp.zeros((), jnp.float32), None
+
+
+def ssm_stack_prefill(sp: Params, cfg: ModelConfig, x, *, remat: str):
+    """Forward over the prompt, also returning final per-layer SSM states.
+
+    (Exact-state prefill: we re-run the recurrences keeping final states.)
+    """
+    def body(h, lp):
+        u = rmsnorm(lp["ln"], h, cfg.norm_eps)
+        if cfg.ssm.variant == "mamba1":
+            xx, z, dt, A, B, C = ssm._mamba1_inputs(lp["mixer"], cfg, u)
+            y, state = ssm.mamba1_scan(xx, dt, A, B, C, cfg.ssm.chunk_size)
+            y = y + lp["mixer"]["D"] * xx.astype(jnp.float32)
+            y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+            out = jnp.einsum("bsc,cd->bsd", y, lp["mixer"]["out_proj"])
+        else:
+            out, state = _mamba2_fwd_with_state(lp["mixer"], cfg, u)
+        return h + out, dict(h=state, **_conv_tail(cfg, u, lp["mixer"]))
+
+    x, states = jax.lax.scan(body, x, sp)
+    return x, states
+
+
+def _conv_tail(cfg: ModelConfig, u: jnp.ndarray, mp: Params):
+    """Last (d_conv - 1) pre-conv channel inputs, for decode warm-start."""
+    K = cfg.ssm.d_conv
+    x = jnp.einsum("bsd,de->bse", u[:, -(K - 1):], mp["in_x"])
+    if cfg.ssm.variant == "mamba1":
+        return {"conv": x.astype(jnp.bfloat16)}
+    bc = jnp.einsum("bsd,de->bse", u[:, -(K - 1):], mp["in_bc"])
+    return {"conv_x": x.astype(jnp.bfloat16),
+            "conv_bc": bc.astype(jnp.bfloat16)}
+
+
+def _mamba2_fwd_with_state(mp, cfg, u):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H, N = s.n_heads, s.d_state
+    P = di // H
+    z, x, B, C, dt = ssm._mamba2_project(mp, cfg, u)
+    A = -jnp.exp(mp["A_log"])
+    Bsz, S = u.shape[:2]
+    y, hT = ssm.ssd_chunked(x.reshape(Bsz, S, H, P), dt, A, B, C, s.chunk_size)
+    y = y + mp["D"][:, None] * x.reshape(Bsz, S, H, P).astype(jnp.float32)
+    y = y.reshape(Bsz, S, di)
+    y = rmsnorm(mp["norm"], (y * jax.nn.silu(z.astype(jnp.float32))
+                             ).astype(u.dtype), cfg.norm_eps)
+    return jnp.einsum("bsc,cd->bsd", y, mp["out_proj"]), hT
+
+
+def ssm_stack_decode(sp: Params, cfg: ModelConfig, x, states, *, ctx=None):
+    def body(h, inp):
+        lp, st = inp
+        h, st = ssm_layer_step(lp, cfg, h, st)
+        return h, st
+
+    x, states = jax.lax.scan(body, x, (sp, states))
+    return x, states
+
+
+# ===================================================================== #
+#  Hybrid stack (zamba2): groups of k SSM layers + SHARED attn block     #
+# ===================================================================== #
+def hybrid_split(cfg: ModelConfig) -> Tuple[int, int]:
+    k = cfg.hybrid_attn_every
+    g = cfg.n_layers // k
+    return g, cfg.n_layers - g * k
+
+
+def hybrid_stack_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    g, tail = hybrid_split(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ssm": jax.vmap(lambda k: _stack_init(
+            lambda kk: ssm_layer_init(kk, cfg, dtype), k, cfg.hybrid_attn_every))(
+            jax.random.split(k1, g)),                      # (g, k, ...)
+        "shared_attn": layer_init(k2, cfg, dtype),         # ONE shared block
+        "tail": (_stack_init(lambda k: ssm_layer_init(k, cfg, dtype), k3, tail)
+                 if tail else None),
+    }
+
+
+def hybrid_stack_fwd(sp: Params, cfg: ModelConfig, x, *, ctx, impl, chunk,
+                     remat: str, unroll: int = 1, collect_kv: bool = False):
+    def ssm_body(h, lp):
+        return ssm_layer_fwd(lp, cfg, h, ctx=ctx), None
+
+    def group_body(h, gp):
+        h, _ = jax.lax.scan(ssm_body, h, gp)
+        h, kv, _ = layer_fwd(sp["shared_attn"], cfg, h, kind="causal",
+                             ctx=ctx, impl=impl, chunk=chunk,
+                             return_kv=collect_kv)
+        return h, kv
+
+    x, kvs = jax.lax.scan(_remat(group_body, remat), x, sp["ssm"],
+                          unroll=unroll)
+    if sp.get("tail") is not None:
+        x, _ = jax.lax.scan(_remat(ssm_body, remat), x, sp["tail"])
+    return x, jnp.zeros((), jnp.float32), kvs   # kvs: (g, B, S, KVH, D)
+
+
+def hybrid_stack_prefill(sp: Params, cfg: ModelConfig, x, *, remat: str,
+                         ctx: ParallelContext = LOCAL_CTX, impl: str = "flashref",
+                         chunk: int = 1024):
+    def group_body(h, gp):
+        def body(hh, lp):
+            u = rmsnorm(lp["ln"], hh, cfg.norm_eps)
+            out, state = _mamba2_fwd_with_state(lp["mixer"], cfg, u)
+            return hh + out, dict(h=state, **_conv_tail(cfg, u, lp["mixer"]))
+
+        h, states = jax.lax.scan(body, h, gp)
+        h, kv, _ = layer_fwd(sp["shared_attn"], cfg, h, kind="causal",
+                             ctx=ctx, impl=impl, chunk=chunk,
+                             return_kv=True)
+        return h, (states, kv)
+
+    x, (states, kvs) = jax.lax.scan(group_body, x, sp["ssm"])
+    tail_states = None
+    if sp.get("tail") is not None:
+        def body(hh, lp):
+            u = rmsnorm(lp["ln"], hh, cfg.norm_eps)
+            out, state = _mamba2_fwd_with_state(lp["mixer"], cfg, u)
+            return hh + out, dict(h=state, **_conv_tail(cfg, u, lp["mixer"]))
+
+        x, tail_states = jax.lax.scan(body, x, sp["tail"])
+    return x, states, kvs, tail_states
+
+
+def hybrid_stack_decode(sp: Params, cfg: ModelConfig, x, states, cache_k,
+                        cache_v, tail_states, pos, *, ctx):
+    def ssm_body(h, inp):
+        lp, st = inp
+        h, st = ssm_layer_step(lp, cfg, h, st)
+        return h, st
+
+    def group_body(h, inp):
+        gp, st, ck, cv = inp
+        h, st = jax.lax.scan(ssm_body, h, (gp, st))
+        h, ck, cv = layer_decode(sp["shared_attn"], cfg, h, ck, cv, pos,
+                                 kind="causal", ctx=ctx)
+        return h, (st, ck, cv)
+
+    x, (states, cache_k, cache_v) = jax.lax.scan(
+        group_body, x, (sp["ssm"], states, cache_k, cache_v))
+    if sp.get("tail") is not None:
+        x, tail_states = jax.lax.scan(ssm_body, x, (sp["tail"], tail_states))
+    return x, states, cache_k, cache_v, tail_states

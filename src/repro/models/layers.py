@@ -1,0 +1,135 @@
+"""Shared pure-JAX building blocks: norms, RoPE, MLPs, embeddings.
+
+Parameters are plain nested dicts of ``jnp.ndarray``; initializers take an
+explicit PRNG key. Compute dtype is bf16 with f32 for norms/softmax/logits.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+#  RMSNorm                                                               #
+# --------------------------------------------------------------------- #
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def l2norm(x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Per-head QK-norm (qwen3-style, scale-free variant)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+#  Rotary position embedding                                             #
+# --------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    freqs = rope_frequencies(x.shape[-1], theta)              # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    angles = angles[..., None, :]                              # (..., S, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+#  MLP (silu / gelu / geglu)                                             #
+# --------------------------------------------------------------------- #
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_up": dense_init(k1, d_model, d_ff, dtype),
+         "w_down": dense_init(k2, d_ff, d_model, dtype)}
+    if act in ("silu", "geglu"):
+        p["w_gate"] = dense_init(k3, d_model, d_ff, dtype)
+    return p
+
+
+def mlp(p: Params, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    up = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if act == "silu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = jax.nn.silu(g) * up
+    elif act == "geglu":
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        h = jax.nn.gelu(g, approximate=True) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up, approximate=True)
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# --------------------------------------------------------------------- #
+#  Embedding / unembedding                                               #
+# --------------------------------------------------------------------- #
+def embed_init(key, vocab: int, d_model: int, tie: bool,
+               dtype=jnp.bfloat16) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": (jax.random.normal(k1, (vocab, d_model), jnp.float32)
+                       * (1.0 / math.sqrt(d_model))).astype(dtype)}
+    if not tie:
+        p["unembed"] = dense_init(k2, d_model, vocab, dtype)
+    return p
+
+
+def embed(p: Params, tokens: jnp.ndarray, scale_by_dim: bool = False) -> jnp.ndarray:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if scale_by_dim:
+        x = x * jnp.asarray(math.sqrt(x.shape[-1]), x.dtype)
+    return x
+
+
+def unembed(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Returns f32 logits."""
+    if "unembed" in p:
+        return jnp.einsum("...d,dv->...v", x, p["unembed"],
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("...d,vd->...v", x, p["embedding"],
+                      preferred_element_type=jnp.float32)
+
+
+# --------------------------------------------------------------------- #
+#  Loss                                                                  #
+# --------------------------------------------------------------------- #
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                          mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean next-token CE. logits (..., V) f32, labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

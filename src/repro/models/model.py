@@ -1,0 +1,242 @@
+"""Model facade: uniform API over all architecture families.
+
+  m = build_model(cfg)
+  params = m.init(key)
+  loss, aux = m.loss_fn(params, batch, ctx=...)
+  logits, cache = m.prefill(params, batch, max_len, ctx=...)
+  logits, cache = m.decode_step(params, tokens, cache, pos, ctx=...)
+  cache = m.init_cache(batch, max_len, abstract=True)   # dry-run stand-ins
+
+Batches:  LM {tokens, labels}; VLM adds {vision}; audio {frames, labels}.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid as hyb
+from repro.models import transformer as tfm
+from repro.models.layers import embed, embed_init, rmsnorm, rmsnorm_init, softmax_cross_entropy, unembed
+from repro.models.moe import LOCAL_CTX, ParallelContext
+
+Batch = Dict[str, jnp.ndarray]
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable
+    loss_fn: Callable            # (params, batch, ctx) -> (loss, aux)
+    forward: Callable            # (params, batch, ctx) -> logits
+    prefill: Callable            # (params, batch, max_len, ctx) -> (logits, cache)
+    decode_step: Callable        # (params, tokens, cache, pos, ctx) -> (logits, cache)
+    init_cache: Callable         # (batch_size, max_len, abstract) -> cache
+
+
+def _kv_dtype(cfg):
+    return jnp.bfloat16
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    a = cfg.attn
+
+    # ----------------------------- init ------------------------------- #
+    def init(key):
+        k_emb, k_stack, k_ln = jax.random.split(key, 3)
+        p = {"embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model,
+                                 cfg.tie_embeddings, dtype),
+             "final_ln": rmsnorm_init(cfg.d_model)}
+        if cfg.family in ("dense", "moe", "audio"):
+            if cfg.attn.pattern == "local_global":
+                p["stack"] = tfm.lg_stack_init(k_stack, cfg, dtype)
+            else:
+                p["stack"] = tfm.uniform_stack_init(k_stack, cfg, dtype)
+        elif cfg.family == "vlm":
+            p["stack"] = tfm.vlm_stack_init(k_stack, cfg, dtype)
+        elif cfg.family == "ssm":
+            p["stack"] = hyb.ssm_stack_init(k_stack, cfg, dtype)
+        elif cfg.family == "hybrid":
+            p["stack"] = hyb.hybrid_stack_init(k_stack, cfg, dtype)
+        else:
+            raise ValueError(cfg.family)
+        return p
+
+    # --------------------------- embedding ---------------------------- #
+    def _embed_in(p, batch):
+        if cfg.family == "audio":
+            return batch["frames"].astype(dtype)
+        x = embed(p["embed"], batch["tokens"], scale_by_dim=cfg.embed_scale)
+        return x
+
+    def _stack_fwd(p, x, batch, ctx, collect_kv=False):
+        impl = cfg.attn_impl
+        kw = dict(ctx=ctx, impl=impl, chunk=1024, remat=cfg.remat_policy,
+                  collect_kv=collect_kv)
+        if cfg.family in ("dense", "moe", "audio"):
+            if cfg.attn.pattern == "local_global":
+                return tfm.lg_stack_fwd(p["stack"], cfg, x, **kw)
+            return tfm.uniform_stack_fwd(p["stack"], cfg, x, **kw)
+        if cfg.family == "vlm":
+            return tfm.vlm_stack_fwd(p["stack"], cfg, x,
+                                     batch["vision"].astype(dtype), **kw)
+        if cfg.family == "ssm":
+            return hyb.ssm_stack_fwd(p["stack"], cfg, x,
+                                     remat=cfg.remat_policy, ctx=ctx)
+        if cfg.family == "hybrid":
+            return hyb.hybrid_stack_fwd(p["stack"], cfg, x, **kw)
+        raise ValueError(cfg.family)
+
+    # ----------------------------- train ------------------------------ #
+    def forward(p, batch, ctx: ParallelContext = LOCAL_CTX):
+        x = _embed_in(p, batch)
+        x, aux, _ = _stack_fwd(p, x, batch, ctx)
+        x = rmsnorm(p["final_ln"], x, cfg.norm_eps)
+        return unembed(p["embed"], x), aux
+
+    def loss_fn(p, batch, ctx: ParallelContext = LOCAL_CTX):
+        logits, aux = forward(p, batch, ctx)
+        mask = batch.get("loss_mask")
+        loss = softmax_cross_entropy(logits, batch["labels"], mask)
+        if cfg.family == "moe":
+            loss = loss + 0.01 * aux
+        return loss, {"ce": loss, "aux": aux}
+
+    # ---------------------------- caches ------------------------------ #
+    def init_cache(batch_size: int, max_len: int, abstract: bool = False):
+        mk = ((lambda s, d: jax.ShapeDtypeStruct(s, d)) if abstract
+              else (lambda s, d: jnp.zeros(s, d)))
+        kvd = _kv_dtype(cfg)
+        B, L = batch_size, cfg.n_layers
+        KVH, D = a.n_kv_heads, a.head_dim
+
+        if cfg.family in ("dense", "moe"):
+            if a.pattern == "local_global":
+                g, tail = tfm.lg_split(cfg)
+                W = min(a.local_window, max_len)
+                c = {"local_k": mk((g, a.local_ratio, B, W, KVH, D), kvd),
+                     "local_v": mk((g, a.local_ratio, B, W, KVH, D), kvd),
+                     "global_k": mk((g, B, max_len, KVH, D), kvd),
+                     "global_v": mk((g, B, max_len, KVH, D), kvd)}
+                if tail:
+                    c["tail_k"] = mk((tail, B, W, KVH, D), kvd)
+                    c["tail_v"] = mk((tail, B, W, KVH, D), kvd)
+                return c
+            return {"k": mk((L, B, max_len, KVH, D), kvd),
+                    "v": mk((L, B, max_len, KVH, D), kvd)}
+        if cfg.family == "vlm":
+            g = cfg.n_layers // cfg.cross_attn_every
+            ns = cfg.cross_attn_every - 1
+            return {"k": mk((g, ns, B, max_len, KVH, D), kvd),
+                    "v": mk((g, ns, B, max_len, KVH, D), kvd),
+                    "cross_k": mk((g, B, cfg.n_vision_tokens, KVH, D), kvd),
+                    "cross_v": mk((g, B, cfg.n_vision_tokens, KVH, D), kvd)}
+        def _ssm_state(lead):
+            s = cfg.ssm
+            di = s.expand * cfg.d_model
+            K = s.d_conv - 1
+            if s.variant == "mamba1":
+                return {"conv": mk(lead + (B, K, di), jnp.bfloat16),
+                        "h": mk(lead + (B, di, s.d_state), jnp.float32)}
+            return {"conv_x": mk(lead + (B, K, di), jnp.bfloat16),
+                    "conv_bc": mk(lead + (B, K, 2 * s.d_state), jnp.bfloat16),
+                    "h": mk(lead + (B, s.n_heads, di // s.n_heads, s.d_state),
+                            jnp.float32)}
+
+        if cfg.family == "ssm":
+            return _ssm_state((L,))
+        if cfg.family == "hybrid":
+            g, tail = hyb.hybrid_split(cfg)
+            k = cfg.hybrid_attn_every
+            c = {"ssm": _ssm_state((g, k)),
+                 "attn_k": mk((g, B, max_len, KVH, D), kvd),
+                 "attn_v": mk((g, B, max_len, KVH, D), kvd)}
+            if tail:
+                c["tail"] = _ssm_state((tail,))
+            return c
+        raise ValueError(f"{cfg.family} has no decode cache (encoder-only?)")
+
+    # ---------------------------- prefill ----------------------------- #
+    def _pad_to(u, target_len, axis):
+        pad = target_len - u.shape[axis]
+        if pad <= 0:
+            return u
+        widths = [(0, 0)] * u.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(u, widths)
+
+    def prefill(p, batch, max_len: int, ctx: ParallelContext = LOCAL_CTX):
+        if cfg.is_encoder:
+            raise ValueError("encoder-only model has no prefill/decode")
+        x = _embed_in(p, batch)
+        S = x.shape[1]
+        if cfg.family == "ssm":
+            x, states = hyb.ssm_stack_prefill(p["stack"], cfg, x,
+                                              remat=cfg.remat_policy)
+            cache = states
+        elif cfg.family == "hybrid":
+            x, st, kvs, tail = hyb.hybrid_stack_prefill(
+                p["stack"], cfg, x, remat=cfg.remat_policy, ctx=ctx)
+            cache = {"ssm": st,
+                     "attn_k": _pad_to(kvs[0], max_len, 2),
+                     "attn_v": _pad_to(kvs[1], max_len, 2)}
+            if tail is not None:
+                cache["tail"] = tail
+        else:
+            x, aux, kvs = _stack_fwd(p, x, batch, ctx, collect_kv=True)
+            if cfg.family == "vlm":
+                k, v = kvs
+                xk, xv = tfm.vlm_precompute_cross_kv(
+                    p["stack"], cfg, batch["vision"].astype(dtype))
+                cache = {"k": _pad_to(k, max_len, 3),
+                         "v": _pad_to(v, max_len, 3),
+                         "cross_k": xk, "cross_v": xv}
+            elif a.pattern == "local_global":
+                lkv, gkv, tkv = kvs
+                cache = {"local_k": lkv[0], "local_v": lkv[1],
+                         "global_k": _pad_to(gkv[0], max_len, 2),
+                         "global_v": _pad_to(gkv[1], max_len, 2)}
+                if tkv is not None:
+                    cache["tail_k"], cache["tail_v"] = tkv
+            else:
+                k, v = kvs
+                cache = {"k": _pad_to(k, max_len, 2),
+                         "v": _pad_to(v, max_len, 2)}
+        x = rmsnorm(p["final_ln"], x[:, -1:], cfg.norm_eps)
+        return unembed(p["embed"], x), cache
+
+    # ------------------------- decode step ---------------------------- #
+    def decode_step(p, tokens, cache, pos, ctx: ParallelContext = LOCAL_CTX):
+        """tokens (B,1) int32; pos: scalar or (B,) absolute position."""
+        x = embed(p["embed"], tokens, scale_by_dim=cfg.embed_scale)
+        if cfg.family in ("dense", "moe") and a.pattern != "local_global":
+            x, ck, cv = tfm.uniform_stack_decode(p["stack"], cfg, x,
+                                                 cache["k"], cache["v"],
+                                                 pos, ctx=ctx)
+            cache = dict(cache, k=ck, v=cv)
+        elif cfg.family in ("dense", "moe"):
+            x, cache = tfm.lg_stack_decode(p["stack"], cfg, x, cache, pos,
+                                           ctx=ctx)
+        elif cfg.family == "vlm":
+            x, cache = tfm.vlm_stack_decode(p["stack"], cfg, x, cache, pos,
+                                            ctx=ctx)
+        elif cfg.family == "ssm":
+            x, cache = hyb.ssm_stack_decode(p["stack"], cfg, x, cache)
+        elif cfg.family == "hybrid":
+            x, st, ck, cv, tail = hyb.hybrid_stack_decode(
+                p["stack"], cfg, x, cache["ssm"],
+                cache["attn_k"], cache["attn_v"], cache.get("tail"),
+                pos, ctx=ctx)
+            cache = dict(cache, ssm=st, attn_k=ck, attn_v=cv)
+            if tail is not None:
+                cache = dict(cache, tail=tail)
+        else:
+            raise ValueError(cfg.family)
+        x = rmsnorm(p["final_ln"], x, cfg.norm_eps)
+        return unembed(p["embed"], x), cache
+
+    return Model(cfg, init, loss_fn, forward, prefill, decode_step, init_cache)

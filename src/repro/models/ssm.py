@@ -1,0 +1,346 @@
+"""State-space model blocks: Mamba-1 (selective scan) and Mamba-2 (SSD).
+
+Both use *chunked* sequence processing so the (d_inner, d_state) expanded
+state is only materialized per-chunk (the jnp analogue of the fused CUDA
+selective-scan — on TPU the Pallas kernel in ``repro.kernels.ssm_scan``
+replaces the inner loop; this module is also its oracle).
+
+Shapes: u (B, S, d_model); mamba1 state h (B, d_inner, d_state);
+mamba2 state h (B, n_heads, head_p, d_state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init
+
+
+def _dt_rank(d_model: int) -> int:
+    return max(1, math.ceil(d_model / 16))
+
+
+# ===================================================================== #
+#  Causal depthwise conv1d (kernel k, shift-and-add form)                #
+# ===================================================================== #
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, C); w: (C, K); b: (C,). Causal depthwise conv + silu."""
+    K = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    S = x.shape[1]
+    y = sum(xp[:, i:i + S, :] * w[:, i] for i in range(K))
+    return jax.nn.silu(y + b)
+
+
+def conv1d_step(conv_state: jnp.ndarray, x_new: jnp.ndarray, w: jnp.ndarray,
+                b: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """conv_state: (B, K-1, C); x_new: (B, C). Returns (new_state, y (B,C))."""
+    window = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,ck->bc", window, w)
+    return window[:, 1:, :], jax.nn.silu(y + b)
+
+
+# ===================================================================== #
+#  Mamba-1                                                               #
+# ===================================================================== #
+def mamba1_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    """x/z projections are SEPARATE params: a fused (d, 2di) projection
+    must be split along the model-sharded output dim, which forces a
+    collective-permute every layer (§Perf iteration A2)."""
+    d, s = cfg.d_model, cfg.ssm
+    di = s.expand * d
+    r = _dt_rank(d)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_x": dense_init(ks[6], d, di, dtype),
+        "in_z": dense_init(ks[0], d, di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (di, s.d_conv), jnp.float32)
+                   * (1.0 / math.sqrt(s.d_conv))).astype(jnp.float32),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], di, r + 2 * s.d_state, dtype),
+        "dt_proj": dense_init(ks[3], r, di, jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of dt in [1e-3, 1e-1]
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d, dtype),
+    }
+
+
+def _mamba1_inputs(p: Params, cfg: ModelConfig, u: jnp.ndarray):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    r = _dt_rank(cfg.d_model)
+    x = jnp.einsum("bsd,de->bse", u, p["in_x"])
+    z = jnp.einsum("bsd,de->bse", u, p["in_z"])
+    x = causal_conv1d(x, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    dbc = jnp.einsum("bsc,ce->bse", x, p["x_proj"])
+    dt_in, B, C = jnp.split(dbc, [r, r + s.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rc->bsc", dt_in.astype(jnp.float32), p["dt_proj"])
+        + p["dt_bias"])                                      # (B,S,di) f32
+    A = -jnp.exp(p["A_log"])                                 # (di, N) f32
+    return x, z, dt, A, B.astype(jnp.float32), C.astype(jnp.float32)
+
+
+def mamba1_scan(x, dt, A, B, C, chunk: int, ctx=None):
+    """Selective scan. x (B,S,di); dt (B,S,di) f32; A (di,N); B,C (B,S,N).
+    Returns (y (B,S,di) f32, h_final (B,di,N)).
+
+    Sequential lax.scan over time: the expanded (di, N) state lives only
+    in the loop carry — the jnp analogue of the fused selective-scan
+    kernel (repro.kernels.ssm_scan keeps it in VMEM on TPU). §Perf
+    iteration A1: an associative_scan formulation materializes an
+    O(log c) slice tree of (B, c, di, N) tensors — ~60x the HBM traffic
+    of this form (203TB -> ~4TB per train step for falcon-mamba)."""
+    Bb, S, di = x.shape
+    N = A.shape[1]
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                                # (B,di),(B,N)
+        dA = jnp.exp(dtt[..., None] * A)                     # (B,di,N)
+        dBx = (dtt * xt.astype(jnp.float32))[..., None] * Bt[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, Ct)
+        return h, y
+
+    from repro.models.attention import _shard
+    da, ma = ((ctx.data_axes, ctx.model_axis) if ctx is not None
+              and getattr(ctx, "mesh", None) is not None else (None, None))
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 1, 0))
+    h0 = jnp.zeros((Bb, di, N), jnp.float32)
+    if ma is not None:
+        # while-carry sharding propagation is weak: pin the expanded state
+        # and the streamed xs to (batch@data, channels@model) (§Perf A3)
+        h0 = _shard(h0, ctx, da, ma, None)
+        xs = tuple(_shard(u, ctx, None, da, ma) if u.ndim == 3 else u
+                   for u in xs)
+    hT, ys = jax.lax.scan(step, h0, xs)
+    ys = jnp.moveaxis(ys, 0, 1)
+    if ma is not None:
+        ys = _shard(ys, ctx, da, None, ma)
+    return ys, hT
+
+
+def mamba1_forward(p: Params, cfg: ModelConfig, u: jnp.ndarray,
+                   ctx=None) -> jnp.ndarray:
+    x, z, dt, A, B, C = _mamba1_inputs(p, cfg, u)
+    y, _ = mamba1_scan(x, dt, A, B, C, cfg.ssm.chunk_size, ctx=ctx)
+    y = y + p["D"] * x.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    return jnp.einsum("bsc,cd->bsd", y, p["out_proj"])
+
+
+def mamba1_init_state(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di), jnp.bfloat16),
+        "h": jnp.zeros((batch, di, s.d_state), jnp.float32),
+    }
+
+
+def mamba1_step(p: Params, cfg: ModelConfig, u: jnp.ndarray,
+                state: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict]:
+    """u: (B, 1, d). Returns (out (B,1,d), new_state)."""
+    s = cfg.ssm
+    r = _dt_rank(cfg.d_model)
+    x = jnp.einsum("bsd,de->bse", u, p["in_x"])[:, 0]
+    z = jnp.einsum("bsd,de->bse", u, p["in_z"])[:, 0]
+    conv, x = conv1d_step(state["conv"], x, p["conv_w"].astype(x.dtype),
+                          p["conv_b"].astype(x.dtype))
+    dbc = jnp.einsum("bc,ce->be", x, p["x_proj"])
+    dt_in, B, C = jnp.split(dbc, [r, r + s.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("br,rc->bc", dt_in.astype(jnp.float32), p["dt_proj"])
+        + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[..., None] * A)                          # (B,di,N)
+    dBx = (dt * x.astype(jnp.float32))[..., None] * B.astype(jnp.float32)[:, None, :]
+    h = dA * state["h"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C.astype(jnp.float32))
+    y = y + p["D"] * x.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    out = jnp.einsum("bc,cd->bd", y, p["out_proj"])[:, None, :]
+    return out, {"conv": conv, "h": h}
+
+
+# ===================================================================== #
+#  Mamba-2 (SSD, scalar A per head, n_groups = 1)                        #
+# ===================================================================== #
+def mamba2_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    """Projections are split (zx / bc / dt) so TP sharding is clean:
+    z,x,dt shard with the heads over `model`; B,C stay replicated."""
+    d, s = cfg.d_model, cfg.ssm
+    di = s.expand * d
+    H = s.n_heads
+    N = s.d_state
+    ks = jax.random.split(key, 7)
+    return {
+        "in_z": dense_init(ks[0], d, di, dtype),
+        "in_x": dense_init(ks[6], d, di, dtype),
+        "in_bc": dense_init(ks[1], d, 2 * N, dtype),
+        "in_dt": dense_init(ks[2], d, H, dtype),
+        "conv_x_w": (jax.random.normal(ks[3], (di, s.d_conv), jnp.float32)
+                     * (1.0 / math.sqrt(s.d_conv))),
+        "conv_x_b": jnp.zeros((di,), jnp.float32),
+        "conv_bc_w": (jax.random.normal(jax.random.fold_in(ks[3], 1),
+                                        (2 * N, s.d_conv), jnp.float32)
+                      * (1.0 / math.sqrt(s.d_conv))),
+        "conv_bc_b": jnp.zeros((2 * N,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[4], (H,), jnp.float32,
+                                       math.log(1e-3), math.log(1e-1))))),
+        "A_log": jnp.log(jax.random.uniform(ks[5], (H,), jnp.float32, 1.0, 16.0)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": rmsnorm_init(di),
+        "out_proj": dense_init(jax.random.fold_in(key, 7), di, d, dtype),
+    }
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., L). Returns (..., L, L) with out[i,j] = sum_{j<k<=i} x[k],
+    -inf above diagonal."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, ctx=None):
+    """Mamba-2 SSD. x (b,s,h,p); dt (b,s,h) f32; A (h,); B,C (b,s,n).
+    Returns y (b,s,h,p) f32 and final state (b,h,p,n)."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    xc = x.reshape(b, nc, chunk, H, P)
+    dtc = dt.reshape(b, nc, chunk, H)
+    Bc = B.reshape(b, nc, chunk, N).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, N).astype(jnp.float32)
+    dA = dtc * A                                              # (b,c,l,h)
+    dA_cum = jnp.cumsum(dA, axis=2)
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))            # (b,c,h,l,l)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]             # (b,c,l,h,p)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)            # (b,c,l,m)
+    y_diag = jnp.einsum("bclm,bchlm,bcmhp->bclhp", scores, L, xdt)
+    # 2) chunk states
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)     # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_states, xdt)
+    # 3) inter-chunk recurrence (sequential over chunks)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                # (b,c,h)
+
+    def body(h_prev, inp):
+        st, dec = inp                                         # (b,h,p,n), (b,h)
+        h_in = h_prev
+        h_next = dec[..., None, None] * h_prev + st
+        return h_next, h_in
+
+    h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    if ctx is not None and getattr(ctx, "mesh", None) is not None:
+        from repro.models.attention import _shard
+        h0 = _shard(h0, ctx, ctx.data_axes, ctx.model_axis, None, None)
+    hT, h_in = jax.lax.scan(body, h0,
+                            (jnp.moveaxis(states, 1, 0),
+                             jnp.moveaxis(chunk_decay, 1, 0)))
+    h_in = jnp.moveaxis(h_in, 0, 1)                           # (b,c,h,p,n)
+    # 4) state -> output within chunk
+    state_decay = jnp.exp(dA_cum)                             # (b,c,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, h_in, state_decay)
+    y = (y_diag + y_off).reshape(b, Sp, H, P)[:, :S]
+    return y, hT
+
+
+def _mamba2_project(p: Params, cfg: ModelConfig, u: jnp.ndarray):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    N = s.d_state
+    z = jnp.einsum("bsd,de->bse", u, p["in_z"])
+    x = jnp.einsum("bsd,de->bse", u, p["in_x"])
+    bc = jnp.einsum("bsd,de->bse", u, p["in_bc"])
+    dt_in = jnp.einsum("bsd,de->bse", u, p["in_dt"])
+    x = causal_conv1d(x, p["conv_x_w"].astype(x.dtype),
+                      p["conv_x_b"].astype(x.dtype))
+    bc = causal_conv1d(bc, p["conv_bc_w"].astype(bc.dtype),
+                       p["conv_bc_b"].astype(bc.dtype))
+    B, C = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])
+    return z, x, B, C, dt
+
+
+def mamba2_forward(p: Params, cfg: ModelConfig, u: jnp.ndarray,
+                   ctx=None) -> jnp.ndarray:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H, N = s.n_heads, s.d_state
+    P = di // H
+    z, x, B, C, dt = _mamba2_project(p, cfg, u)
+    A = -jnp.exp(p["A_log"])
+    Bsz, S = u.shape[:2]
+    y, _ = ssd_chunked(x.reshape(Bsz, S, H, P), dt, A, B, C, s.chunk_size,
+                       ctx=ctx)
+    y = y + p["D"][:, None] * x.reshape(Bsz, S, H, P).astype(jnp.float32)
+    y = y.reshape(Bsz, S, di)
+    y = rmsnorm(p["norm"], (y * jax.nn.silu(z.astype(jnp.float32))
+                            ).astype(u.dtype), cfg.norm_eps)
+    return jnp.einsum("bsc,cd->bsd", y, p["out_proj"])
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H, N = s.n_heads, s.d_state
+    P = di // H
+    return {
+        "conv_x": jnp.zeros((batch, s.d_conv - 1, di), jnp.bfloat16),
+        "conv_bc": jnp.zeros((batch, s.d_conv - 1, 2 * N), jnp.bfloat16),
+        "h": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba2_step(p: Params, cfg: ModelConfig, u: jnp.ndarray,
+                state: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, Dict]:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    H, N = s.n_heads, s.d_state
+    P = di // H
+    z = jnp.einsum("bsd,de->bse", u, p["in_z"])[:, 0]
+    x = jnp.einsum("bsd,de->bse", u, p["in_x"])[:, 0]
+    bc = jnp.einsum("bsd,de->bse", u, p["in_bc"])[:, 0]
+    dt_in = jnp.einsum("bsd,de->bse", u, p["in_dt"])[:, 0]
+    conv_x, x = conv1d_step(state["conv_x"], x, p["conv_x_w"].astype(x.dtype),
+                            p["conv_x_b"].astype(x.dtype))
+    conv_bc, bc = conv1d_step(state["conv_bc"], bc,
+                              p["conv_bc_w"].astype(bc.dtype),
+                              p["conv_bc_b"].astype(bc.dtype))
+    B, C = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])   # (b,H)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                             # (b,H)
+    xh = x.reshape(-1, H, P).astype(jnp.float32)
+    dBx = (dt[..., None] * xh)[..., None] * B.astype(jnp.float32)[:, None, None, :]
+    h = dA[..., None, None] * state["h"] + dBx                       # (b,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", h, C.astype(jnp.float32))
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(-1, di)
+    y = rmsnorm(p["norm"], (y * jax.nn.silu(z.astype(jnp.float32))
+                            ).astype(u.dtype), cfg.norm_eps)
+    out = jnp.einsum("bc,cd->bd", y, p["out_proj"])[:, None, :]
+    return out, {"conv_x": conv_x, "conv_bc": conv_bc, "h": h}

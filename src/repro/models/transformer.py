@@ -1,0 +1,367 @@
+"""Decoder/encoder transformer stacks with scan-over-layers.
+
+Supports: dense GQA decoders, MoE decoders, encoder-only (audio), VLM
+(grouped scan: N self-attn layers + 1 cross-attn layer per group), and
+gemma3-style local:global attention (grouped scan: `ratio` local + 1 global).
+
+All stacks use ``jax.lax.scan`` over stacked layer params so the compiled
+HLO contains each distinct layer body exactly once (fast compiles at 126
+layers, compact dry-run HLO) and ``jax.checkpoint`` for rematerialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (Params, mlp, mlp_init, rmsnorm, rmsnorm_init)
+from repro.models.moe import ParallelContext, moe_ffn, moe_init
+
+Cache = Dict[str, Any]
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "minimal":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if policy == "full":
+        return jax.checkpoint(fn)
+    raise ValueError(f"unknown remat policy {policy!r}")
+
+
+def _stack_init(fn, key, n: int):
+    """vmap an init fn over n split keys -> stacked (n, ...) params."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+# ===================================================================== #
+#  One decoder layer (pre-norm attn + pre-norm FFN/MoE)                  #
+# ===================================================================== #
+def layer_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": rmsnorm_init(cfg.d_model),
+         "ln2": rmsnorm_init(cfg.d_model),
+         "attn": attn.attn_init(k1, cfg.attn, cfg.d_model, dtype=dtype)}
+    if cfg.family == "moe":
+        p["moe"] = moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def layer_fwd(lp: Params, cfg: ModelConfig, x: jnp.ndarray, *,
+              kind: str, ctx: ParallelContext, impl: str, chunk: int,
+              positions: Optional[jnp.ndarray] = None,
+              return_kv: bool = False):
+    h, kv = attn.self_attention_block(
+        lp["attn"], cfg.attn, rmsnorm(lp["ln1"], x, cfg.norm_eps),
+        kind=kind, impl=impl, chunk=chunk, positions=positions, ctx=ctx)
+    x = x + h
+    y = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        f, aux = moe_ffn(lp["moe"], cfg, y, ctx)
+    else:
+        f, aux = mlp(lp["mlp"], y, cfg.act), jnp.zeros((), jnp.float32)
+    x = x + f
+    return x, (kv if return_kv else None), aux
+
+
+def layer_decode(lp: Params, cfg: ModelConfig, x, ck, cv, pos, *, kind, ctx):
+    # tp2d decode: the whole residual stream stays FEATURE-sharded
+    # (B, 1, d@data) so every weight (d@data, out@model) contracts against
+    # its resident shard; only decode-sized activation psums move (§Perf C2)
+    fsd = bool(getattr(ctx, "feature_shard_decode", False)
+               and getattr(ctx, "mesh", None) is not None)
+
+    def fshard(u):
+        return attn._shard(u, ctx, None, None, ctx.data_axes) if fsd else u
+
+    y1 = fshard(rmsnorm(lp["ln1"], x, cfg.norm_eps))
+    h, ck, cv = attn.decode_self_attention(
+        lp["attn"], cfg.attn, y1, ck, cv, pos, kind=kind)
+    x = x + fshard(h)
+    y = fshard(rmsnorm(lp["ln2"], x, cfg.norm_eps))
+    if cfg.family == "moe":
+        f, _ = moe_ffn(lp["moe"], cfg, y, ctx)
+    else:
+        f = mlp(lp["mlp"], y, cfg.act)
+    return x + fshard(f), ck, cv
+
+
+# ===================================================================== #
+#  Uniform stack (dense, moe, audio encoder)                             #
+# ===================================================================== #
+def uniform_stack_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    return _stack_init(lambda k: layer_init(k, cfg, dtype), key, cfg.n_layers)
+
+
+def _kind_for(cfg: ModelConfig) -> str:
+    return "bidirectional" if cfg.is_encoder else "causal"
+
+
+def _group_stack(sp, g: int):
+    """(L, ...) stacked params -> (L/g, g, ...) for layer-group remat."""
+    def re(p):
+        return p.reshape(p.shape[0] // g, g, *p.shape[1:])
+
+    return jax.tree.map(re, sp)
+
+
+def uniform_stack_fwd(sp: Params, cfg: ModelConfig, x, *, ctx, impl, chunk,
+                      remat: str, unroll: int = 1, collect_kv: bool = False):
+    """Layer-group remat (§Perf B2): the outer scan checkpoints only every
+    ``cfg.layer_group`` layers, dividing the dominant bwd-saved activation
+    (the per-layer residual carry) by the group size at no extra
+    recompute — each layer is still executed exactly twice (fwd + replay).
+
+    (A Megatron-SP seq-sharded-residual variant was tried and REFUTED:
+    GSPMD materializes full-d_ff cotangents, 3x the collective bytes —
+    see EXPERIMENTS.md §Perf B1.)
+    """
+    kind = _kind_for(cfg)
+
+    def body(carry, lp):
+        h, aux = carry
+        h, kv, a = layer_fwd(lp, cfg, h, kind=kind, ctx=ctx, impl=impl,
+                             chunk=chunk, return_kv=collect_kv)
+        return (h, aux + a), kv
+
+    g = max(1, getattr(cfg, "layer_group", 1))
+    if g > 1 and cfg.n_layers % g == 0 and remat != "none":
+        def group_body(carry, gp):
+            return jax.lax.scan(body, carry, gp)
+
+        (x, aux), kvs = jax.lax.scan(
+            _remat(group_body, remat), (x, jnp.zeros((), jnp.float32)),
+            _group_stack(sp, g), unroll=unroll)
+        if collect_kv:
+            kvs = jax.tree.map(lambda u: u.reshape(-1, *u.shape[2:]), kvs)
+    else:
+        (x, aux), kvs = jax.lax.scan(_remat(body, remat),
+                                     (x, jnp.zeros((), jnp.float32)),
+                                     sp, unroll=unroll)
+    return x, aux, kvs      # kvs: (k (L,B,S,KVH,D), v (...)) if collect_kv
+
+
+def uniform_stack_extend(sp: Params, cfg: ModelConfig, x, cache_k, cache_v,
+                         pos0, *, ctx):
+    """Chunked prefill: run C tokens through the stack, extending caches
+    in place (engine path for continuous batching — paper takeaway #1:
+    fine-grained scheduling units)."""
+    def body(h, inp):
+        lp, ck, cv = inp
+        out, ck, cv = attn.extend_self_attention(
+            lp["attn"], cfg.attn, rmsnorm(lp["ln1"], h, cfg.norm_eps),
+            ck, cv, pos0)
+        h = h + out
+        y = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        if cfg.family == "moe":
+            f, _ = moe_ffn(lp["moe"], cfg, y, ctx)
+        else:
+            f = mlp(lp["mlp"], y, cfg.act)
+        return h + f, (ck, cv)
+
+    x, (cache_k, cache_v) = jax.lax.scan(body, x, (sp, cache_k, cache_v))
+    return x, cache_k, cache_v
+
+
+def uniform_stack_decode(sp: Params, cfg: ModelConfig, x, cache_k, cache_v,
+                         pos, *, ctx):
+    kind = _kind_for(cfg)
+
+    def body(h, inp):
+        lp, ck, cv = inp
+        h, ck, cv = layer_decode(lp, cfg, h, ck, cv, pos, kind=kind, ctx=ctx)
+        return h, (ck, cv)
+
+    x, (cache_k, cache_v) = jax.lax.scan(body, x, (sp, cache_k, cache_v))
+    return x, cache_k, cache_v
+
+
+# ===================================================================== #
+#  local:global grouped stack (gemma3)                                   #
+# ===================================================================== #
+def lg_split(cfg: ModelConfig) -> Tuple[int, int]:
+    """Returns (n_groups, n_tail_local). Pattern per group: `ratio` local
+    layers then 1 global layer; trailing layers are local."""
+    r = cfg.attn.local_ratio
+    g = cfg.n_layers // (r + 1)
+    return g, cfg.n_layers - g * (r + 1)
+
+
+def lg_stack_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    g, tail = lg_split(cfg)
+    r = cfg.attn.local_ratio
+    k1, k2, k3 = jax.random.split(key, 3)
+    init1 = lambda k: layer_init(k, cfg, dtype)
+    return {
+        "locals": jax.vmap(lambda k: _stack_init(init1, k, r))(
+            jax.random.split(k1, g)),                      # (g, r, ...)
+        "globals": _stack_init(init1, k2, g),              # (g, ...)
+        "tail": _stack_init(init1, k3, tail) if tail else None,
+    }
+
+
+def lg_stack_fwd(sp: Params, cfg: ModelConfig, x, *, ctx, impl, chunk,
+                 remat: str, unroll: int = 1, collect_kv: bool = False):
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def local_body(carry, lp):
+        h, aux = carry
+        h, kv, a = layer_fwd(lp, cfg, h, kind="local", ctx=ctx, impl=impl,
+                             chunk=chunk, return_kv=collect_kv)
+        if collect_kv:  # trailing window stored at its RING slots (slot=p%W)
+            W = cfg.attn.local_window
+            S = kv[0].shape[1]
+            if S >= W:
+                inv = (jnp.arange(W) - S) % W
+                kv = tuple(u[:, -W:][:, inv] for u in kv)
+            else:
+                kv = tuple(jnp.pad(u, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+                           for u in kv)
+        return (h, aux + a), kv
+
+    def group_body(carry, gp):
+        (h, aux), lkvs = jax.lax.scan(local_body, carry, gp["locals"])
+        h, gkv, a = layer_fwd(gp["globals"], cfg, h, kind="causal", ctx=ctx,
+                              impl=impl, chunk=chunk, return_kv=collect_kv)
+        return (h, aux + a), (lkvs, gkv)
+
+    (x, aux), (local_kvs, global_kvs) = jax.lax.scan(
+        _remat(group_body, remat), (x, aux0),
+        {"locals": sp["locals"], "globals": sp["globals"]}, unroll=unroll)
+    tail_kvs = None
+    if sp.get("tail") is not None:
+        (x, aux), tail_kvs = jax.lax.scan(_remat(local_body, remat),
+                                          (x, aux), sp["tail"])
+    return x, aux, (local_kvs, global_kvs, tail_kvs)
+
+
+def lg_stack_decode(sp: Params, cfg: ModelConfig, x, cache: Cache, pos, *, ctx):
+    def local_body(h, inp):
+        lp, ck, cv = inp
+        h, ck, cv = layer_decode(lp, cfg, h, ck, cv, pos, kind="local", ctx=ctx)
+        return h, (ck, cv)
+
+    def group_body(h, inp):
+        gp, lck, lcv, gck, gcv = inp
+        h, (lck, lcv) = jax.lax.scan(local_body, h, (gp["locals"], lck, lcv))
+        h, gck, gcv = layer_decode(gp["globals"], cfg, h, gck, gcv, pos,
+                                   kind="causal", ctx=ctx)
+        return h, (lck, lcv, gck, gcv)
+
+    x, (lck, lcv, gck, gcv) = jax.lax.scan(
+        group_body, x,
+        ({"locals": sp["locals"], "globals": sp["globals"]},
+         cache["local_k"], cache["local_v"], cache["global_k"], cache["global_v"]))
+    cache = dict(cache, local_k=lck, local_v=lcv, global_k=gck, global_v=gcv)
+    if sp.get("tail") is not None:
+        x, (tck, tcv) = jax.lax.scan(local_body, x,
+                                     (sp["tail"], cache["tail_k"], cache["tail_v"]))
+        cache = dict(cache, tail_k=tck, tail_v=tcv)
+    return x, cache
+
+
+# ===================================================================== #
+#  VLM grouped stack (N self layers + 1 gated cross-attn layer)          #
+# ===================================================================== #
+def vlm_stack_init(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    n_self = cfg.cross_attn_every - 1
+    g = cfg.n_layers // cfg.cross_attn_every
+    k1, k2, k3 = jax.random.split(key, 3)
+    init1 = lambda k: layer_init(k, cfg, dtype)
+
+    def cross_init(k):
+        ka, kb = jax.random.split(k)
+        return {"ln": rmsnorm_init(cfg.d_model),
+                "xattn": attn.cross_attn_init(ka, cfg.attn, cfg.d_model,
+                                              cfg.d_vision, dtype),
+                "ln2": rmsnorm_init(cfg.d_model),
+                "mlp": mlp_init(kb, cfg.d_model, cfg.d_ff, cfg.act, dtype)}
+
+    return {
+        "selfs": jax.vmap(lambda k: _stack_init(init1, k, n_self))(
+            jax.random.split(k1, g)),                      # (g, n_self, ...)
+        "crosses": _stack_init(cross_init, k2, g),         # (g, ...)
+    }
+
+
+def _cross_layer_fwd(cp, cfg, x, vision, impl, chunk, ctx=None):
+    h = attn.cross_attention_block(cp["xattn"], cfg.attn,
+                                   rmsnorm(cp["ln"], x, cfg.norm_eps),
+                                   vision, impl=impl, chunk=chunk, ctx=ctx)
+    x = x + h
+    x = x + mlp(cp["mlp"], rmsnorm(cp["ln2"], x, cfg.norm_eps), cfg.act)
+    return x
+
+
+def vlm_stack_fwd(sp: Params, cfg: ModelConfig, x, vision, *, ctx, impl,
+                  chunk, remat: str, unroll: int = 1, collect_kv: bool = False):
+    def self_body(carry, lp):
+        h, aux = carry
+        h, kv, a = layer_fwd(lp, cfg, h, kind="causal", ctx=ctx, impl=impl,
+                             chunk=chunk, return_kv=collect_kv)
+        return (h, aux + a), kv
+
+    def group_body(carry, gp):
+        carry, kvs = jax.lax.scan(self_body, carry, gp["selfs"])
+        h, aux = carry
+        h = _cross_layer_fwd(gp["crosses"], cfg, h, vision, impl, chunk, ctx)
+        return (h, aux), kvs
+
+    (x, aux), kvs = jax.lax.scan(
+        _remat(group_body, remat), (x, jnp.zeros((), jnp.float32)),
+        {"selfs": sp["selfs"], "crosses": sp["crosses"]}, unroll=unroll)
+    return x, aux, kvs      # (g, n_self, B, S, KVH, D) when collect_kv
+
+
+def vlm_stack_decode(sp: Params, cfg: ModelConfig, x, cache: Cache, pos, *, ctx):
+    def self_body(h, inp):
+        lp, ck, cv = inp
+        h, ck, cv = layer_decode(lp, cfg, h, ck, cv, pos, kind="causal", ctx=ctx)
+        return h, (ck, cv)
+
+    def group_body(h, inp):
+        gp, ck, cv, xk, xv = inp
+        h, (ck, cv) = jax.lax.scan(self_body, h, (gp["selfs"], ck, cv))
+        # cross-attn over cached (pre-projected) vision k/v
+        a = cfg.attn
+        B = h.shape[0]
+        y = rmsnorm(gp["crosses"]["ln"], h, cfg.norm_eps)
+        q = jnp.einsum("bsd,de->bse", y, gp["crosses"]["xattn"]["wq"]
+                       ).reshape(B, 1, a.n_heads, a.head_dim)
+        o = attn.decode_attention(q, xk, xv, kv_len=xk.shape[1],
+                                  kind="bidirectional")
+        o = jnp.einsum("bse,ed->bsd", o.reshape(B, 1, -1),
+                       gp["crosses"]["xattn"]["wo"])
+        h = h + jnp.tanh(gp["crosses"]["xattn"]["gate"]).astype(o.dtype) * o
+        h = h + mlp(gp["crosses"]["mlp"],
+                    rmsnorm(gp["crosses"]["ln2"], h, cfg.norm_eps), cfg.act)
+        return h, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(
+        group_body, x,
+        ({"selfs": sp["selfs"], "crosses": sp["crosses"]},
+         cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]))
+    return x, dict(cache, k=ck, v=cv)
+
+
+def vlm_precompute_cross_kv(sp: Params, cfg: ModelConfig, vision):
+    """Project vision tokens through every cross layer's k/v once."""
+    a = cfg.attn
+
+    def one(cp):
+        B, T, _ = vision.shape
+        k = jnp.einsum("btd,de->bte", vision, cp["xattn"]["wk"]
+                       ).reshape(B, T, a.n_kv_heads, a.head_dim)
+        v = jnp.einsum("btd,de->bte", vision, cp["xattn"]["wv"]
+                       ).reshape(B, T, a.n_kv_heads, a.head_dim)
+        return k, v
+
+    return jax.vmap(one)(sp["crosses"])   # (g, B, T, KVH, D)

@@ -1,0 +1,242 @@
+"""Sharding recipes: map every param/input/cache leaf to a PartitionSpec.
+
+Recipes (DESIGN.md §5):
+  fsdp_tp   — train default. TP dim over `model`; the other matmul dim over
+              the data axes (ZeRO-3); batch over data axes.
+  dp_tp     — replicated weights + TP; batch over data axes (small models).
+  tp_serve  — decode: weights TP over `model` only (replicated over data);
+              batch over data; KV-cache *sequence* over `model`
+              (flash-decode SP: softmax reductions psum over `model`).
+  tp2d_serve— decode for models too big to replicate over data: weights 2D
+              (d over data axes, heads/ff over model); cache batch over
+              data, sequence over model; activation reshards are
+              decode-sized (tiny).
+
+Rules are applied by *leaf path suffix* and aligned to the trailing dims of
+each leaf, so stacked layouts ((L, ...), (g, r, ...), …) inherit the same
+rule with leading scan dims replicated.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def data_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def pick_recipe(cfg: ModelConfig, shape: ShapeConfig) -> str:
+    big = cfg.n_params() * 2 > 12e9   # bf16 bytes vs ~12GB budget/chip
+    if shape.kind == "train":
+        return "fsdp_tp" if cfg.n_params() * 2 > 1e9 else "dp_tp"
+    if shape.kind == "prefill":
+        return "fsdp_tp" if big else "dp_tp"
+    return "tp2d_serve" if big else "tp_serve"
+
+
+# --------------------------------------------------------------------- #
+#  Parameter rules                                                       #
+# --------------------------------------------------------------------- #
+def _param_rule(path: str, cfg: ModelConfig, recipe: str, mesh: Mesh,
+                ndim: int):
+    """Returns a tuple spec for the TRAILING dims of the leaf."""
+    d = data_axes_of(mesh)
+    fsdp = d if recipe == "fsdp_tp" else (d if recipe == "tp2d_serve" else None)
+    m = "model" if "model" in mesh.axis_names else None
+
+    def rule():
+        # ---- embeddings ----
+        if path.endswith("embed/embedding"):
+            return (m, fsdp)                      # (V, d)
+        if path.endswith("embed/unembed"):
+            return (fsdp, m)                      # (d, V)
+        # ---- attention ----
+        if re.search(r"(attn|xattn)/w[kv]$", path):
+            # shard kv heads only when they divide the model axis (else the
+            # flat (KVH*hd) shard would split a head: forced reshards)
+            ok = m and cfg.attn.n_kv_heads % mesh.shape["model"] == 0
+            return (fsdp, m if ok else None)
+        if re.search(r"(attn|xattn)/wq$", path):
+            return (fsdp, m)                      # (d_in, heads*hd)
+        if re.search(r"(attn|xattn)/wo$", path):
+            return (m, fsdp)                      # (heads*hd, d)
+        if re.search(r"/(q_norm|k_norm|gate)$", path) and not path.endswith("w_gate"):
+            return ()
+        # ---- MoE ----
+        if "moe/router" in path:
+            return (None, None)
+        if re.search(r"moe/w_(gate|up)$", path):
+            return (m, fsdp, None)                # (E, d, f)
+        if path.endswith("moe/w_down"):
+            return (m, None, fsdp)                # (E, f, d)
+        if re.search(r"shared/w_(gate|up)$", path):
+            return (fsdp, m)
+        if path.endswith("shared/w_down"):
+            return (m, fsdp)
+        # ---- dense MLP ----
+        if re.search(r"mlp/w_(gate|up)$", path):
+            return (fsdp, m)
+        if path.endswith("mlp/w_down"):
+            return (m, fsdp)
+        # ---- mamba (1 & 2) ----
+        if re.search(r"mixer/in_[xz]$", path):
+            return (fsdp, m)                      # (d, di) channels TP
+        if path.endswith("mixer/x_proj"):
+            return (m, None)                      # (di, r+2N)
+        if path.endswith("mixer/dt_proj"):
+            return (None, m)                      # (r, di)
+        if path.endswith("mixer/A_log") and ndim >= 2 and cfg.ssm.variant == "mamba1":
+            return (m, None)                      # (di, N)
+        # ---- mamba2 ----
+        if path.endswith("mixer/in_dt"):
+            return (fsdp, m)
+        if path.endswith("mixer/in_bc"):
+            return (fsdp, None)
+        if path.endswith("mixer/conv_x_w") or path.endswith("mixer/conv_w"):
+            return (m, None)                      # (di, K)
+        if re.search(r"mixer/conv_(x_)?b$", path):
+            return (m,)
+        if path.endswith("mixer/conv_bc_w"):
+            return (None, None)
+        if path.endswith("mixer/conv_bc_b"):
+            return (None,)
+        if re.search(r"mixer/(A_log|D|dt_bias)$", path):
+            return (m,)                           # (di,) or (H,)
+        if path.endswith("mixer/norm/scale"):
+            return (m,)                           # (di,) gated-norm scale
+        if path.endswith("mixer/out_proj"):
+            return (m, fsdp)                      # (di, d)
+        # ---- norms & rest ----
+        if path.endswith("scale"):
+            return (None,)
+        return None                               # replicate fully
+
+    r = rule()
+    if r is None:
+        return P()
+    r = tuple(r)
+    assert len(r) <= ndim, f"{path}: rule {r} longer than ndim {ndim}"
+    return P(*((None,) * (ndim - len(r)) + r))
+
+
+def _path_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def sanitize(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axes from dims they don't evenly divide (e.g. vocab=504,
+    batch=1): divisibility is required for clean GSPMD partitioning."""
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is None:
+            out.append(None)
+        elif shape[i] % _axis_size(mesh, ax) == 0:
+            out.append(ax)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def param_specs(cfg: ModelConfig, recipe: str, mesh: Mesh, params_shape):
+    """params_shape: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    def spec(kp, leaf):
+        s = _param_rule(_path_str(kp), cfg, recipe, mesh, len(leaf.shape))
+        return sanitize(s, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+# --------------------------------------------------------------------- #
+#  Batch / cache rules                                                   #
+# --------------------------------------------------------------------- #
+def batch_specs(cfg: ModelConfig, recipe: str, mesh: Mesh, kind: str):
+    d = data_axes_of(mesh)
+    if kind == "decode":
+        tok = P(d)            # (B, 1)
+    else:
+        tok = P(d, None)      # (B, S)
+    specs = {"tokens": tok, "labels": tok}
+    if cfg.family == "audio":
+        specs["frames"] = P(d, None, None)
+        specs.pop("tokens")
+    if cfg.family == "vlm":
+        specs["vision"] = P(d, None, None)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, recipe: str, mesh: Mesh, cache_shape,
+                seq_axis_shards: Optional[str] = "model"):
+    """KV caches: batch over data axes, sequence over `model` (SP decode).
+    SSM states: batch over data, channels/heads over `model`."""
+    d = data_axes_of(mesh)
+    m = seq_axis_shards if "model" in mesh.axis_names else None
+
+    def spec(kp, leaf):
+        path = _path_str(kp)
+        nd = len(leaf.shape)
+
+        def trail(r):
+            s = P(*((None,) * (nd - len(r)) + tuple(r)))
+            s = sanitize(s, leaf.shape, mesh)
+            # long-context fallback: batch too small to shard -> put the
+            # sequence dim over data axes too (SP over the whole mesh)
+            if (r and r[0] == d and s[nd - len(r)] is None and len(r) >= 4
+                    and m is not None):
+                seq_i = nd - len(r) + 1
+                if leaf.shape[seq_i] % (_axis_size(mesh, d) * _axis_size(mesh, m)) == 0:
+                    full = list(s)
+                    full[seq_i] = tuple(d) + ("model",)
+                    s = P(*full)
+            return s
+
+        if re.search(r"(^|/)(k|v|global_k|global_v|attn_k|attn_v)$", path):
+            return trail((d, m, None, None))          # (..., B, S, KVH, D)
+        if re.search(r"(local_k|local_v|tail_k|tail_v)$", path):
+            return trail((d, None, None, None))       # ring window unsharded
+        if re.search(r"cross_(k|v)$", path):
+            return trail((d, None, None, None))
+        if path.endswith("h") and cfg.ssm.variant == "mamba1":
+            return trail((d, "model", None))           # (..., B, di, N)
+        if path.endswith("h"):
+            return trail((d, "model", None, None))     # (..., B, H, P, N)
+        if path.endswith("conv_x") or path.endswith("conv"):
+            return trail((d, None, "model"))
+        if path.endswith("conv_bc"):
+            return trail((d, None, None))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def sanitize_tree(spec_tree, shape_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s, l: sanitize(s, l.shape, mesh), spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,2 @@
+from repro.serve.engine import Engine, EngineConfig  # noqa: F401
+from repro.serve.kvcache import Sequence, SlotAllocator  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.train.optimizer import adafactor, adamw, get_optimizer  # noqa: F401
+from repro.train.trainer import Trainer, TrainerConfig, make_train_step  # noqa: F401

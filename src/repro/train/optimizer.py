@@ -1,0 +1,169 @@
+"""Functional optimizers (no optax dependency): AdamW and Adafactor,
+with global-norm clipping and warmup+cosine schedules.
+
+State pytrees mirror the param pytree, so the parameter sharding specs
+apply directly to the moments (ZeRO-3 optimizer-state sharding for free).
+Adafactor keeps a factored second moment — the memory-sane choice for the
+405B-class configs (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (grads, state, params)
+    name: str
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+# --------------------------------------------------------------------- #
+#  Schedules                                                             #
+# --------------------------------------------------------------------- #
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  min_ratio: float = 0.1) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5
+                         * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+# --------------------------------------------------------------------- #
+#  AdamW                                                                 #
+# --------------------------------------------------------------------- #
+def adamw(lr: Callable | float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: float = 1.0, moment_dtype=jnp.float32) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+        step_lr = lr_fn(count)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            delta = delta + weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - step_lr * delta
+            return (p_new.astype(p.dtype), m_new.astype(moment_dtype),
+                    v_new.astype(moment_dtype))
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+    return Optimizer(init, update, "adamw")
+
+
+# --------------------------------------------------------------------- #
+#  Adafactor (factored second moment, optional first moment)             #
+# --------------------------------------------------------------------- #
+def adafactor(lr: Callable | float = 1e-2, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0, min_dim_factored: int = 128) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def factored(p) -> bool:
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_factored
+                and p.shape[-2] >= min_dim_factored)
+
+    def init(params):
+        def st(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"s": jax.tree.map(st, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        beta = 1.0 - c ** (-decay)
+        step_lr = lr_fn(count)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rms_r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                u = gf / (jnp.sqrt(rms_r)[..., None] * jnp.sqrt(vc)[..., None, :])
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf / jnp.sqrt(v)
+                new_s = {"v": v}
+            # update clipping (Adafactor-style RMS clip)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            p_new = (p.astype(jnp.float32) - step_lr *
+                     (u + weight_decay * p.astype(jnp.float32)))
+            return p_new.astype(p.dtype), new_s
+
+        is_state_leaf = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        out = jax.tree.map(upd, grads, state["s"], params,
+                           is_leaf=lambda x: False)
+        # out mirrors params with (p_new, state) tuples at param positions
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"s": new_s, "count": count}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def get_optimizer(name: str, lr=None, total_steps: int = 10000) -> Optimizer:
+    sched = warmup_cosine(lr or (3e-4 if name == "adamw" else 1e-2),
+                          warmup=min(1000, total_steps // 10) or 1,
+                          total=total_steps)
+    if name == "adamw":
+        return adamw(sched)
+    if name == "adafactor":
+        return adafactor(sched)
+    raise ValueError(name)

@@ -1,0 +1,153 @@
+"""Train-step builder + Trainer loop.
+
+``make_train_step`` builds the jit-able (params, opt_state, batch) ->
+(params, opt_state, metrics) function with:
+  * gradient accumulation over microbatches (lax.scan over batch splits),
+  * optional int8-compressed gradient all-reduce (parallel/collectives),
+  * remat policy inherited from the model config.
+
+``Trainer`` (used by launch/train.py and examples) adds checkpointing,
+auto-resume, straggler monitoring and throughput accounting.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models.model import Model
+from repro.models.moe import LOCAL_CTX, ParallelContext
+from repro.train.optimizer import Optimizer, get_optimizer
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], k: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % k == 0, f"batch {b} not divisible by microbatches {k}"
+        return x.reshape(k, b // k, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(model: Model, opt: Optimizer, run: RunConfig,
+                    ctx: ParallelContext = LOCAL_CTX) -> Callable:
+    k = run.num_microbatches
+
+    def loss_of(params, mb):
+        loss, metrics = model.loss_fn(params, mb, ctx)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if k == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        else:
+            mbs = _split_microbatches(batch, k)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(loss_of, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(acc_body, (g0, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            loss = loss / k
+            metrics = {"ce": loss, "aux": jnp.zeros(())}
+        if run.use_grad_compression:
+            from repro.parallel.collectives import compress_grads_int8
+            grads = compress_grads_int8(grads)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# --------------------------------------------------------------------- #
+#  Trainer loop (host-side)                                              #
+# --------------------------------------------------------------------- #
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    optimizer: str = "adamw"
+    lr: Optional[float] = None
+    straggler_factor: float = 3.0   # step slower than EWMA*factor => flag
+
+
+class Trainer:
+    def __init__(self, model: Model, run: RunConfig, tcfg: TrainerConfig,
+                 ctx: ParallelContext = LOCAL_CTX, mesh=None,
+                 shardings: Optional[Dict[str, Any]] = None):
+        self.model = model
+        self.run = run
+        self.tcfg = tcfg
+        self.ctx = ctx
+        self.opt = get_optimizer(tcfg.optimizer, tcfg.lr, tcfg.total_steps)
+        step_fn = make_train_step(model, self.opt, run, ctx)
+        if shardings is not None:
+            self.train_step = jax.jit(
+                step_fn,
+                in_shardings=(shardings["params"], shardings["opt"],
+                              shardings["batch"]),
+                out_shardings=(shardings["params"], shardings["opt"], None),
+                donate_argnums=(0, 1))
+        else:
+            self.train_step = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.ckpt_mgr = None
+        if tcfg.checkpoint_dir:
+            from repro.checkpoint import CheckpointManager
+            self.ckpt_mgr = CheckpointManager(tcfg.checkpoint_dir,
+                                              keep=tcfg.keep_checkpoints)
+        from repro.ft import StragglerMonitor
+        self.straggler = StragglerMonitor(factor=tcfg.straggler_factor)
+
+    def init_state(self, key):
+        params = self.model.init(key)
+        return params, self.opt.init(params)
+
+    def restore_or_init(self, key):
+        params, opt_state = self.init_state(key)
+        if self.ckpt_mgr is not None:
+            restored = self.ckpt_mgr.restore_latest(like=(params, opt_state))
+            if restored is not None:
+                step, (params, opt_state) = restored
+                return step + 1, params, opt_state
+        return 0, params, opt_state
+
+    def fit(self, data: Iterator, key=None, start_step: int = 0,
+            params=None, opt_state=None):
+        key = key if key is not None else jax.random.PRNGKey(0)
+        if params is None:
+            start_step, params, opt_state = self.restore_or_init(key)
+            if start_step:
+                data.seek(start_step)
+        history = []
+        for step in range(start_step, self.tcfg.total_steps):
+            batch = next(data)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self.train_step(params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.straggler.observe(step, dt)
+            if step % self.tcfg.log_every == 0 or step == self.tcfg.total_steps - 1:
+                history.append((step, float(metrics["loss"]), dt))
+                print(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
+                      f"{dt * 1e3:.1f} ms")
+            if (self.ckpt_mgr is not None and step > 0
+                    and step % self.tcfg.checkpoint_every == 0):
+                self.ckpt_mgr.save(step, (params, opt_state))
+        if self.ckpt_mgr is not None:
+            self.ckpt_mgr.save(self.tcfg.total_steps - 1, (params, opt_state),
+                               block=True)
+        return params, opt_state, history

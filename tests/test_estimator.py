@@ -1,0 +1,176 @@
+"""Interference-estimator validation against the paper's MEASURED numbers.
+
+Each test encodes one of the paper's experiments as KernelProfiles built
+from the NCU metrics the paper reports (utilization fractions over the
+kernel's isolated runtime), runs the estimator with the matching GPU
+resource model, and checks predicted slowdown/speedup against the paper's
+measurement within a tolerance band. This is the faithful-reproduction
+axis: same methodology, the paper's hardware numbers as ground truth.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (H100, RTX3090, TPU_V5E, KernelProfile,
+                        WorkloadProfile, colocation_speedup, estimate,
+                        pairwise_slowdown, sensitivity)
+from repro.core.resources import RESOURCE_AXES
+
+
+def profile_on(dev, name, duration=1.0, ws=0.0, hit=0.0, **axes) -> KernelProfile:
+    """Utilization-style builder: axes are FRACTIONS of capacity consumed
+    over `duration` seconds of isolated runtime (the NCU-metric view)."""
+    d = {r: 0.0 for r in RESOURCE_AXES}
+    for ax, frac in axes.items():
+        d[ax] = frac * dev.capacity(ax) * duration
+    return KernelProfile(name, demand=d, duration=duration,
+                         cache_working_set=ws, cache_hit_fraction=hit)
+
+
+# ----------------------------------------------------------------- #
+#  §3 pitfall 1: two issue-saturating compute kernels (IPC 3.99/4)    #
+#  measured: 1.73x each when colocated on all SMs                     #
+# ----------------------------------------------------------------- #
+def test_pitfall1_issue_saturation():
+    k1 = profile_on(H100, "compute1", issue=0.99, vpu=0.5)
+    k2 = profile_on(H100, "compute2", issue=0.99, vpu=0.5)
+    r = estimate([k1, k2], H100)
+    # both saturate issue -> ~2x predicted; paper measured 1.73x
+    assert 1.6 <= r.slowdowns["compute1"] <= 2.1
+    assert r.bottleneck["compute1"] == "issue"
+
+
+def test_pitfall1_sm_restriction():
+    """Usher-style restriction of an issue-bound kernel to 6.25% of SMs
+    (its 'achieved occupancy') slows it ~8.6x (paper: 8.57x).
+    Occupancy is the WRONG metric: the kernel needs issue slots, not
+    resident warps."""
+    k = profile_on(H100, "compute", issue=0.99, vpu=0.5)
+    r = estimate([k], H100, slot_fraction={"compute": 0.0625})
+    assert 7.0 <= r.slowdowns["compute"] <= 17.0
+
+
+# ----------------------------------------------------------------- #
+#  §3 pitfall 2: compute (IPC 3.99) x copy (IPC 0.57, memory-bound)   #
+#  measured: copy's execution time doubles under colocation           #
+# ----------------------------------------------------------------- #
+def test_pitfall2_copy_vs_issue_hog():
+    comp = profile_on(H100, "compute", issue=0.99, vpu=0.5)
+    copy = profile_on(H100, "copy", issue=0.57 / 4, hbm=0.75, l2=0.4)
+    r = estimate([comp, copy], H100)
+    s_copy = r.slowdowns["copy"]
+    assert 1.5 <= s_copy <= 2.6, s_copy   # paper: ~2x
+    # compute itself is barely affected (its own axis saturation persists)
+    assert r.slowdowns["compute"] <= 1.3
+
+
+# ----------------------------------------------------------------- #
+#  §4.3 Table 1: LLM decode vs copy-kernel bandwidth sweep            #
+#  measured P90 TBT: 16.9 -> 17.6 / 18.38 / 19.92 / 22 ms             #
+# ----------------------------------------------------------------- #
+def test_table1_membw_contention():
+    decode = profile_on(H100, "decode", hbm=0.55, issue=0.10)
+    measured = {0.27: 17.6 / 16.9, 0.51: 18.38 / 16.9,
+                0.69: 19.92 / 16.9, 0.81: 22.0 / 16.9}
+    for bw_util, want in measured.items():
+        copy = profile_on(H100, f"copy{bw_util}", hbm=bw_util,
+                          issue=0.05)
+        r = estimate([decode, copy], H100)
+        got = r.slowdowns["decode"]
+        assert abs(got - want) / want < 0.25, (bw_util, got, want)
+
+
+# ----------------------------------------------------------------- #
+#  §4.4.3 Table 3: two FP64 kernels, speedup of colocation vs serial  #
+#  measured: S1 1.93x, S2 1.87x, S3 1.33x, S4 1.03x                   #
+# ----------------------------------------------------------------- #
+@pytest.mark.parametrize("util,want,tol", [
+    (0.2422, 1.93, 0.10), (0.4771, 1.87, 0.12),
+    (0.6942, 1.33, 0.15), (0.9068, 1.03, 0.12)])
+def test_table3_fp64_pipeline(util, want, tol):
+    # FP64 pipe maps to the vpu axis; IPC stays below the limit (paper)
+    a = profile_on(H100, "a", vpu=util, issue=0.49)
+    b = profile_on(H100, "b", vpu=util, issue=0.49)
+    got = colocation_speedup(a, b, H100)
+    assert abs(got - want) / want < tol, (got, want)
+
+
+# ----------------------------------------------------------------- #
+#  §4.4.2 Table 2: Gemma3-1B decode TBT vs ILP-sweep stressor S1..S4  #
+#  RTX3090 measured (bs8): 6.08 -> 6.23 / 6.56 / 12.52 ms             #
+# ----------------------------------------------------------------- #
+def test_table2_ipc_sweep():
+    decode = profile_on(RTX3090, "decode", hbm=0.5, issue=0.55 / 4)
+    preds = {}
+    for ipc, want in [(1.18, 6.23 / 6.08), (2.06, 6.56 / 6.08),
+                      (3.45, 12.52 / 6.08)]:
+        st = profile_on(RTX3090, f"S{ipc}", issue=ipc / 4, vpu=ipc / 8)
+        r = estimate([decode, st], RTX3090)
+        preds[ipc] = r.slowdowns["decode"]
+        assert abs(preds[ipc] - want) / want < 0.35, (ipc, preds[ipc], want)
+    # monotone in stressor IPC, sharp knee near the issue limit
+    assert preds[1.18] < preds[2.06] < preds[3.45]
+    assert preds[3.45] > 1.6
+
+
+# ----------------------------------------------------------------- #
+#  §4.3 Fig. 3: L2 pollution curve shape                              #
+# ----------------------------------------------------------------- #
+def test_fig3_l2_pollution_shape():
+    """No slowdown while both instances fit in L2; slowdown appears once
+    the combined working set spills (paper peak 2.15x at 16MB; we model
+    the bandwidth effect, not the thrash-cliff latency spike — deviation
+    documented in EXPERIMENTS.md)."""
+    slows = []
+    for mb in [4, 8, 16, 26, 48]:
+        ws = 2 * mb * 1e6   # in+out arrays per instance
+        mk = lambda n: profile_on(
+            H100, n, hbm=0.94, l2=0.45, issue=0.2, ws=ws, hit=0.95)
+        r = estimate([mk("a"), mk("b")], H100)
+        slows.append(r.slowdowns["a"])
+    assert slows[0] < 1.15 and slows[1] < 1.15        # fits: 16/32MB < 50MB
+    assert max(slows[2:]) > 1.5                       # spill: big slowdown
+    assert slows[2] >= slows[0]
+
+
+# ----------------------------------------------------------------- #
+#  §4.4.1 Fig. 4: shared-memory (smem/VMEM) bandwidth interference    #
+# ----------------------------------------------------------------- #
+def test_fig4_smem_interference():
+    """GEMM (smem-hungry) vs strided-copy stressor: slowdown grows with
+    the stressor's smem pressure (bank conflicts serialize wavefronts).
+    Paper: 3.75x for dim-1024 GEMM (high smem-pipe util) at 32-way
+    conflicts; 1.79x for dim-2048 (lower smem-pipe util)."""
+    gemm_hi = profile_on(H100, "gemm1024", mxu=0.35, smem=0.75, issue=0.4)
+    gemm_lo = profile_on(H100, "gemm2048", mxu=0.55, smem=0.40, issue=0.3)
+    slows_hi, slows_lo = [], []
+    for conflict_util in (0.1, 0.5, 0.95):
+        st = profile_on(H100, "strided", smem=conflict_util, issue=0.3)
+        slows_hi.append(estimate([gemm_hi, st], H100).slowdowns["gemm1024"])
+        slows_lo.append(estimate([gemm_lo, st], H100).slowdowns["gemm2048"])
+    # monotone in conflicts; the high-smem-util GEMM is MORE sensitive
+    assert slows_hi[0] < slows_hi[1] <= slows_hi[2]
+    assert slows_hi[2] > slows_lo[2]
+    assert slows_hi[2] > 1.4
+    assert slows_lo[2] > 1.2     # paper: even the low-util GEMM slows 1.79x
+
+
+# ----------------------------------------------------------------- #
+#  Sensitivity fingerprints distinguish phases (TPU target)           #
+# ----------------------------------------------------------------- #
+def test_sensitivity_fingerprint_tpu():
+    prefill = profile_on(TPU_V5E, "prefill", mxu=0.7, hbm=0.2)
+    decode = profile_on(TPU_V5E, "decode", mxu=0.05, hbm=0.85)
+    sp = sensitivity(prefill, TPU_V5E)
+    sd = sensitivity(decode, TPU_V5E)
+    assert sp.dominant() == "mxu"
+    assert sd.dominant() in ("hbm", "l2")
+    # complementary profiles colocate well (the scheduler's pairing basis)
+    r = estimate([prefill, decode], TPU_V5E)
+    assert max(r.slowdowns.values()) < 1.45
+
+
+def test_estimator_is_symmetric_and_scale_free():
+    a = profile_on(TPU_V5E, "a", mxu=0.6, hbm=0.3)
+    b = profile_on(TPU_V5E, "b", mxu=0.6, hbm=0.3)
+    r = estimate([a, b], TPU_V5E)
+    assert abs(r.slowdowns["a"] - r.slowdowns["b"]) < 1e-9

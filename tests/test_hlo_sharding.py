@@ -1,0 +1,102 @@
+"""HLO analyzer and sharding-rule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hlo
+from repro.parallel import sharding as shd
+
+SAMPLE = """
+HloModule jit_f
+
+%body.1 (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %w = f32[8,8]{1,0} constant({...})
+  %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%sum.1
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ar)
+}
+
+%sum.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%cond.1 (p2: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i2, %n), direction=LT
+}
+
+ENTRY %main (x0: f32[8,8]) -> f32[8,8] {
+  %x0 = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,8]) tuple(%zero, %x0)
+  %w2 = (s32[], f32[8,8]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_hlo_trip_count_multiplies_flops_and_collectives():
+    st = hlo.analyze(SAMPLE)
+    # dot: 2*8*8*8 = 1024 flops, x7 loop trips
+    assert st.mxu_flops == 1024 * 7
+    # all-reduce: 2 * 256B result traffic x7
+    assert st.coll_bytes_by_kind["all-reduce"] == 2 * 256 * 7
+    assert st.coll_count_by_kind["all-reduce"] == 7
+
+
+def test_hlo_parse_handles_nested_tuple_headers():
+    mod = hlo.parse_module(SAMPLE)
+    assert set(mod.comps) == {"body.1", "sum.1", "cond.1", "main"}
+    assert mod.mult["body.1"] == 7
+    assert mod.mult["main"] == 1
+
+
+# ----------------------------- sharding ------------------------------- #
+def _mesh():
+    # single-device "mesh" stand-in with fake sizes for rule checks
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    return FakeMesh()
+
+
+def test_param_rules():
+    import jax.tree_util as jtu
+    from repro.configs.registry import get_config
+    cfg = get_config("qwen3-1.7b")
+    mesh = _mesh()
+    leaf = jax.ShapeDtypeStruct((28, 2048, 6144), jnp.bfloat16)
+    s = shd._param_rule("stack/mlp/w_gate", cfg, "fsdp_tp", mesh, 3)
+    assert s == P(None, "data", "model")
+    s = shd._param_rule("stack/attn/wk", cfg, "fsdp_tp", mesh, 3)
+    assert s[-1] is None      # kv heads (8) don't divide model axis (16)
+    s = shd._param_rule("stack/attn/q_norm", cfg, "fsdp_tp", mesh, 2)
+    assert all(ax is None for ax in s)   # replicated
+
+
+def test_sanitize_drops_nondivisible():
+    mesh = _mesh()
+    s = shd.sanitize(P("model", "data"), (504, 1280), mesh)
+    assert s == P(None, "data")          # hubert vocab 504 % 16 != 0
+    s = shd.sanitize(P(("data",), None), (1, 128), mesh)
+    assert s == P(None, None)            # batch 1 can't shard
+
+
+def test_recipe_picker():
+    from repro.configs.base import SHAPES
+    from repro.configs.registry import get_config
+    big, small = get_config("llama3-405b"), get_config("qwen3-1.7b")
+    assert shd.pick_recipe(big, SHAPES["train_4k"]) == "fsdp_tp"
+    assert shd.pick_recipe(big, SHAPES["decode_32k"]) == "tp2d_serve"
+    assert shd.pick_recipe(small, SHAPES["decode_32k"]) == "tp_serve"

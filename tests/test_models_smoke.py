@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, assert output shapes + finiteness; decoder
+archs also run prefill + 2 decode steps and check prefill/decode parity.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, supports_shape
+from repro.configs.registry import ASSIGNED, get_config, list_archs, tiny_config
+from repro.models import build_model
+
+ARCHS = list_archs(assigned_only=True)
+
+
+def make_batch(cfg, B=2, S=32, key=None):
+    key = key or jax.random.PRNGKey(7)
+    k1, k2 = jax.random.split(key)
+    batch = {}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(k1, (B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.random.randint(k1, (B, S), 0, cfg.vocab_size)
+    batch["labels"] = jax.random.randint(k2, (B, S), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        batch["vision"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.n_vision_tokens, cfg.d_vision),
+            jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    cfg = tiny_config(get_config(arch))
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss, aux = jax.jit(m.loss_fn)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    logits, _ = jax.jit(m.forward)(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if not get_config(a).is_encoder])
+def test_prefill_decode_parity(arch):
+    """Decoding token t+1 after prefill[0:t] must match full forward."""
+    cfg = tiny_config(get_config(arch))
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 24
+    batch = make_batch(cfg, B=B, S=S)
+    max_len = S + 8
+
+    full_logits, _ = jax.jit(m.forward)(params, batch)
+
+    pre_batch = {k: (v[:, :S - 1] if k in ("tokens", "labels") else v)
+                 for k, v in batch.items()}
+    logits_p, cache = jax.jit(lambda p, b: m.prefill(p, b, max_len))(params, pre_batch)
+    # prefill last-token logits == forward logits at position S-2
+    np.testing.assert_allclose(
+        np.asarray(logits_p[:, 0], np.float32),
+        np.asarray(full_logits[:, S - 2], np.float32), rtol=0.15, atol=0.3)
+
+    logits_d, cache = jax.jit(lambda p, t, c: m.decode_step(p, t, c, S - 1))(
+        params, batch["tokens"][:, S - 1:S], cache)
+    np.testing.assert_allclose(
+        np.asarray(logits_d[:, 0], np.float32),
+        np.asarray(full_logits[:, S - 1], np.float32), rtol=0.15, atol=0.3)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_grads_flow(arch):
+    cfg = tiny_config(get_config(arch))
+    m = build_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B=1, S=16)
+    grads = jax.jit(jax.grad(lambda p: m.loss_fn(p, batch)[0]))(params)
+    flat, _ = jax.tree.flatten(grads)
+    assert all(np.all(np.isfinite(np.asarray(g, np.float32))) for g in flat)
+    norms = [float(jnp.linalg.norm(g.astype(jnp.float32))) for g in flat]
+    assert any(n > 0 for n in norms), f"{arch}: all-zero grads"
+
+
+def test_applicability_matrix():
+    cells = []
+    for cfg in ASSIGNED:
+        for sname, shape in SHAPES.items():
+            if supports_shape(cfg, shape):
+                cells.append((cfg.name, sname))
+    assert len(cells) == 32
+    assert ("hubert-xlarge", "decode_32k") not in cells
+    assert ("falcon-mamba-7b", "long_500k") in cells
+    assert ("gemma3-4b", "long_500k") in cells
+    assert ("llama3-405b", "long_500k") not in cells
+
+
+def test_param_counts_match_paper_scale():
+    """Analytic param counts are in the advertised ballpark."""
+    expect = {
+        "llama3-405b": (380e9, 430e9),
+        "falcon-mamba-7b": (6e9, 8.5e9),
+        "gemma-2b": (2.0e9, 3.3e9),
+        "qwen3-1.7b": (1.2e9, 2.4e9),
+        "gemma3-4b": (3.0e9, 5.0e9),
+        "phi3.5-moe-42b-a6.6b": (39e9, 45e9),
+        # NOTE: the assigned spec (48L x 64e x d_ff 1408) arithmetically
+        # yields ~28.5B total; the "16b" in the name is the marketing label
+        # of the original (27L) model. We follow the assigned spec.
+        "moonshot-v1-16b-a3b": (26e9, 31e9),
+        "zamba2-1.2b": (0.9e9, 1.6e9),
+        "hubert-xlarge": (0.8e9, 1.2e9),
+        "llama-3.2-vision-90b": (80e9, 95e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).n_params()
+        assert lo <= n <= hi, f"{arch}: n_params {n / 1e9:.2f}B not in [{lo / 1e9}, {hi / 1e9}]B"

@@ -1,0 +1,112 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import TPU_V5E, H100, KernelProfile, estimate
+from repro.core.resources import RESOURCE_AXES
+from repro.core.scheduler import evaluate_pair
+from repro.core.profile import WorkloadProfile
+from repro.models.attention import flashref_attention, reference_attention
+from repro.models.ssm import mamba1_scan
+from repro.kernels.ref import ref_ssm_scan
+
+AX = st.sampled_from(["mxu", "vpu", "issue", "hbm", "smem"])
+
+
+def _prof(name, util_map, dev=TPU_V5E):
+    d = {r: 0.0 for r in RESOURCE_AXES}
+    for a, f in util_map.items():
+        d[a] = f * dev.capacity(a)
+    return KernelProfile(name, demand=d, duration=1.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(AX, st.floats(0.05, 0.95)), min_size=1, max_size=4))
+def test_estimator_slowdowns_at_least_one(utils):
+    """No kernel ever speeds up from contention."""
+    ks = [_prof(f"k{i}", {a: f}) for i, (a, f) in enumerate(utils)]
+    r = estimate(ks, TPU_V5E)
+    assert all(s >= 1.0 - 1e-9 for s in r.slowdowns.values())
+
+
+@settings(max_examples=40, deadline=None)
+@given(AX, st.floats(0.1, 0.9), st.floats(0.05, 0.5))
+def test_estimator_monotone_in_background_load(axis, big, small):
+    """More background load on the same axis never helps."""
+    k = _prof("k", {axis: 0.6})
+    lo = estimate([k, _prof("bg", {axis: small})], TPU_V5E).slowdowns["k"]
+    hi = estimate([k, _prof("bg", {axis: min(big + small, 0.99)})],
+                  TPU_V5E).slowdowns["k"]
+    assert hi >= lo - 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(AX, AX, st.floats(0.2, 0.9))
+def test_disjoint_axes_do_not_interfere(a1, a2, f):
+    if a1 == a2:
+        return
+    r = estimate([_prof("x", {a1: f}), _prof("y", {a2: f})], TPU_V5E)
+    assert max(r.slowdowns.values()) < 1.6   # only mild inflation possible
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.1, 0.9), st.floats(0.1, 0.9))
+def test_pair_evaluation_symmetry(fa, fb):
+    a = WorkloadProfile("a", (_prof("a", {"mxu": fa}),))
+    b = WorkloadProfile("b", (_prof("b", {"hbm": fb}),))
+    pab = evaluate_pair(a, b, TPU_V5E)
+    pba = evaluate_pair(b, a, TPU_V5E)
+    assert abs(pab.throughput_gain - pba.throughput_gain) < 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 3),
+       st.sampled_from([16, 32, 64]), st.sampled_from([1, 2, 4]))
+def test_flashref_equals_reference(b, hk, s, g):
+    """flash-equivalent chunked attention == naive oracle, any shape."""
+    key = jax.random.PRNGKey(b * 100 + hk * 10 + g)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, s, hk * g, 16), jnp.float32)
+    kk = jax.random.normal(k2, (b, s, hk, 16), jnp.float32)
+    v = jax.random.normal(k3, (b, s, hk, 16), jnp.float32)
+    got = flashref_attention(q, kk, v, "causal", chunk=16)
+    want = reference_attention(q, kk, v, "causal")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(8, 48), st.sampled_from([8, 16]), st.sampled_from([4, 8]),
+       st.sampled_from([4, 8, 16]))
+def test_mamba_chunked_scan_equals_sequential(s, di, n, chunk):
+    """Chunked associative scan == sequential recurrence, any chunking."""
+    key = jax.random.PRNGKey(s)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (1, s, di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, s, di)) - 2)
+    A = -jnp.exp(jax.random.normal(ks[2], (di, n)) * 0.3)
+    B = jax.random.normal(ks[3], (1, s, n)) * 0.5
+    C = jax.random.normal(ks[4], (1, s, n)) * 0.5
+    got, _ = mamba1_scan(x, dt, A, B, C, chunk=chunk)
+    want = ref_ssm_scan(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 64))
+def test_data_pipeline_seek_property(step, batch_pow):
+    """batch_at(s) == iterating to s, for any s."""
+    from repro.configs.registry import get_config, tiny_config
+    from repro.data import DataConfig, SyntheticLM
+    cfg = tiny_config(get_config("qwen3-1.7b"))
+    d = DataConfig(seq_len=8, global_batch=2, vocab_size=cfg.vocab_size,
+                   seed=batch_pow)
+    src = SyntheticLM(cfg, d)
+    a = src.batch_at(step)
+    src.seek(step)
+    b = next(src)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
