@@ -12,7 +12,8 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core import TPU_V5E, WorkloadProfile, estimate, plan_colocation, sensitivity
+from repro.core import (TPU_V5E, WorkloadProfile, plan_colocation,
+                        sensitivity_batch)
 from repro.core.profile import from_dryrun_json
 
 Row = Tuple[str, float, str]
@@ -47,18 +48,24 @@ def stressor_suite() -> List[Row]:
 
 
 def phase_sensitivity() -> List[Row]:
-    """Sensitivity fingerprint of each arch x shape phase (dry-run)."""
-    rows = []
+    """Sensitivity fingerprint of each arch x shape phase (dry-run) — all
+    phases fingerprinted in ONE batched estimator solve."""
+    recs, profs = [], []
     for f in sorted(RESULTS.glob("*__pod1.json")):
         rec = json.loads(f.read_text())
         if rec.get("skipped"):
             continue
-        prof = from_dryrun_json(rec)
-        t0 = time.perf_counter()
-        rep = sensitivity(prof, TPU_V5E)
-        us = (time.perf_counter() - t0) * 1e6
+        recs.append(rec)
+        profs.append(from_dryrun_json(rec))
+    if not profs:
+        return []
+    t0 = time.perf_counter()
+    reps = sensitivity_batch(profs, TPU_V5E)
+    us_each = (time.perf_counter() - t0) * 1e6 / len(profs)
+    rows = []
+    for rec, rep in zip(recs, reps):
         top = rep.ranked()[:2]
-        rows.append((f"sensitivity_{rec['arch']}_{rec['shape']}", us,
+        rows.append((f"sensitivity_{rec['arch']}_{rec['shape']}", us_each,
                      f"dominant={top[0]}:{rep.scores[top[0]]:.2f}x"
                      f"|second={top[1]}:{rep.scores[top[1]]:.2f}x"))
     return rows

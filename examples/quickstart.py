@@ -7,8 +7,8 @@
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import (TPU_V5E, KernelProfile, WorkloadProfile, estimate,
-                        plan_colocation, sensitivity)
+from repro.core import (TPU_V5E, KernelProfile, WorkloadProfile,
+                        estimate_batch, plan_colocation, sensitivity_batch)
 from repro.core.resources import RESOURCE_AXES
 
 
@@ -25,14 +25,15 @@ def main():
     train = phase("train_step", mxu=0.65, hbm=0.45, issue=0.35, ici=0.40)
 
     print("== sensitivity fingerprints (slowdown under a 90% stressor) ==")
-    for p in (prefill, decode, train):
-        rep = sensitivity(p, TPU_V5E)
+    # all three fingerprints (3 phases x 7 axes x 5 lambdas) = one solve
+    for p, rep in zip((prefill, decode, train),
+                      sensitivity_batch((prefill, decode, train), TPU_V5E)):
         tops = ", ".join(f"{a}={rep.scores[a]:.2f}x" for a in rep.ranked()[:3])
         print(f"  {p.name:12s} dominant axis: {rep.dominant():6s} ({tops})")
 
-    print("\n== pairwise colocation predictions ==")
-    for a, b in ((prefill, decode), (prefill, train), (decode, train)):
-        r = estimate([a, b], TPU_V5E)
+    print("\n== pairwise colocation predictions (one batched solve) ==")
+    pairs = ((prefill, decode), (prefill, train), (decode, train))
+    for (a, b), r in zip(pairs, estimate_batch(pairs, TPU_V5E)):
         print(f"  {a.name:12s} + {b.name:12s} -> "
               + ", ".join(f"{k}: {v:.2f}x" for k, v in r.slowdowns.items()))
 

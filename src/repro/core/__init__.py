@@ -1,10 +1,12 @@
 """The paper's contribution: multi-resource GPU/TPU interference
 quantification and colocation scheduling. See DESIGN.md §1-2."""
 from repro.core.resources import DEVICES, H100, RTX3090, TPU_V5E, DeviceModel  # noqa: F401
-from repro.core.profile import KernelProfile, WorkloadProfile  # noqa: F401
-from repro.core.estimator import (ColocationResult, colocation_speedup,  # noqa: F401
-                                  estimate, pairwise_slowdown,
+from repro.core.profile import KernelProfile, ProfileMatrix, WorkloadProfile  # noqa: F401
+from repro.core.estimator import (BatchResult, ColocationResult,  # noqa: F401
+                                  colocation_speedup, estimate,
+                                  estimate_batch, pairwise_slowdown,
                                   workload_slowdown)
 from repro.core.sensitivity import (SensitivityReport, cache_pollution_curve,  # noqa: F401
-                                    sensitivity, stressor)
-from repro.core.scheduler import Plan, Placement, evaluate_pair, plan_colocation  # noqa: F401
+                                    sensitivity, sensitivity_batch, stressor)
+from repro.core.scheduler import (Plan, Placement, evaluate_pair,  # noqa: F401
+                                  evaluate_pair_partitioned, plan_colocation)

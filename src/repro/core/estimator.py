@@ -24,17 +24,31 @@ Capacity scaling: `slot_fraction` models SM partitioning (green contexts /
 CUDA_MPS_ACTIVE_THREAD_PERCENTAGE): per-slot axes (mxu/vpu/issue/smem)
 scale with the slot share; device-wide axes (hbm/l2/ici) do NOT — exactly
 the distinction the paper draws in §4.3.
+
+Batch execution: the solver is written over dense (scenarios x kernels x
+axes) NumPy arrays, so `estimate_batch` solves thousands of colocation
+scenarios in one vectorized pass — cheap enough for the scheduling hot
+path (the planner's full pairwise matrix, sensitivity sweeps). The scalar
+`estimate` is a batch of one, so both paths are numerically identical.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.profile import KernelProfile, WorkloadProfile
-from repro.core.resources import RESOURCE_AXES, DeviceModel
+import numpy as np
+
+from repro.core.profile import (KernelProfile, ProfileMatrix,
+                                WorkloadProfile, effective_demand_arrays,
+                                isolated_time_arrays, utilization_arrays)
+from repro.core.resources import AXIS_INDEX, RESOURCE_AXES, DeviceModel
 
 PER_SLOT_AXES = ("mxu", "vpu", "issue", "smem")
 DEVICE_AXES = ("hbm", "l2", "ici")
+
+_N_AXES = len(RESOURCE_AXES)
+_PER_SLOT_IDX = np.array([AXIS_INDEX[r] for r in PER_SLOT_AXES])
+_SMEM = AXIS_INDEX["smem"]
 
 
 @dataclass
@@ -49,6 +63,44 @@ class ColocationResult:
         return self.slowdowns[name]
 
 
+@dataclass
+class BatchResult:
+    """Struct-of-arrays result of one batched solve (padded to the widest
+    scenario; `mask` marks real members). Hot-path consumers (planner,
+    sensitivity sweeps) read the arrays directly; `result(i)` materializes
+    the dict-based ColocationResult view of scenario i."""
+    names: Optional[List[List[str]]]    # member names (None when solved
+                                        # on the array-only hot path)
+    mask: np.ndarray                    # (S, K) bool
+    speeds: np.ndarray                  # (S, K)
+    slowdowns: np.ndarray               # (S, K)
+    bottleneck: np.ndarray              # (S, K) axis index, -1 = none
+    axis_load: np.ndarray               # (S, A)
+    feasible_slots: np.ndarray          # (S,) bool
+
+    def __len__(self) -> int:
+        return len(self.mask)
+
+    def result(self, i: int) -> ColocationResult:
+        assert self.names is not None, \
+            "solved without names: read the arrays directly"
+        ns = self.names[i]
+        return ColocationResult(
+            speeds={n: float(self.speeds[i, j]) for j, n in enumerate(ns)},
+            slowdowns={n: float(self.slowdowns[i, j])
+                       for j, n in enumerate(ns)},
+            bottleneck={n: (RESOURCE_AXES[b] if (b := int(
+                self.bottleneck[i, j])) >= 0 else "none")
+                for j, n in enumerate(ns)},
+            axis_load={r: float(self.axis_load[i, a])
+                       for r, a in AXIS_INDEX.items()},
+            feasible_slots=bool(self.feasible_slots[i]),
+        )
+
+    def results(self) -> List[ColocationResult]:
+        return [self.result(i) for i in range(len(self))]
+
+
 # queueing inflation: near-saturated ISSUE slots delay every co-runner's
 # instructions even when its own demand fits in the leftover (paper Table 2
 # knee; calibrated there, validated out-of-sample on pitfall 2). Mild HBM
@@ -56,23 +108,237 @@ class ColocationResult:
 _INFLATION = {"issue": (1.05, 4), "hbm": (0.10, 4)}
 
 
-def _utilizations(kernels: Sequence[KernelProfile], dev: DeviceModel,
-                  slot_fraction: Dict[str, float]) -> Dict[str, Dict[str, float]]:
-    total_ws = sum(k.cache_working_set for k in kernels)
-    us = {}
-    for k in kernels:
-        share = (k.cache_working_set / total_ws
-                 if total_ws > dev.cache_capacity and k.cache_working_set
-                 else 1.0)
-        u = k.utilization(dev, cache_share=share)
-        frac = slot_fraction.get(k.name, 1.0)
-        # restricting a kernel to a slot fraction: per-slot axes capacity
-        # seen by that kernel shrinks -> its relative demand grows
-        if frac < 1.0:
-            for r in PER_SLOT_AXES:
-                u[r] = u[r] / max(frac, 1e-6)
-        us[k.name] = u
-    return us
+def _gather(pm: ProfileMatrix, members, fractions):
+    """Pad scenarios to (S, K[, A]) dense arrays; padded rows are zeroed
+    so masked sums/maxes are no-ops. An ndarray `members` means uniform
+    scenario width — no padding loop (the planner's hot path)."""
+    if isinstance(members, np.ndarray):
+        idx = members
+        mask = np.ones(idx.shape, bool)
+        frac = (np.asarray(fractions, np.float64) if fractions is not None
+                else np.ones(idx.shape, np.float64))
+    else:
+        S = len(members)
+        K = max(len(m) for m in members)
+        idx = np.zeros((S, K), np.int64)
+        mask = np.zeros((S, K), bool)
+        frac = np.ones((S, K), np.float64)
+        for s, (m, f) in enumerate(zip(members, fractions)):
+            idx[s, :len(m)] = m
+            mask[s, :len(m)] = True
+            frac[s, :len(m)] = f
+    demand = pm.demand[idx] * mask[:, :, None]
+    duration = pm.duration[idx] * mask
+    ws = pm.cache_working_set[idx] * mask
+    hit = pm.cache_hit_fraction[idx] * mask
+    slots = pm.slots_needed[idx] * mask
+    return idx, mask, frac, demand, duration, ws, hit, slots
+
+
+def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
+                fractions=None, names: Optional[List[List[str]]] = None
+                ) -> BatchResult:
+    """Vectorized core: solve S colocation scenarios, each a list of row
+    indices into `pm` (or a uniform-width (S, K) ndarray), with optional
+    per-member slot fractions. `names` feeds the dict-view `result(i)`;
+    array-only consumers may omit it."""
+    if len(members) == 0:
+        z2 = np.zeros((0, 0))
+        return BatchResult(names if names is not None else [],
+                           np.zeros((0, 0), bool), z2, z2,
+                           np.zeros((0, 0), np.int64),
+                           np.zeros((0, _N_AXES)), np.zeros(0, bool))
+    if fractions is None and not isinstance(members, np.ndarray):
+        fractions = [[1.0] * len(m) for m in members]
+    if names is None and not isinstance(members, np.ndarray):
+        names = [[pm.names[i] for i in m] for m in members]
+    _, mask, frac, demand, duration, ws, hit, slots = _gather(
+        pm, members, fractions)
+    S, K = mask.shape
+    if K == 0:                    # every scenario empty: nothing contends
+        z = np.zeros((S, 0))
+        return BatchResult(names, mask, z, z, np.zeros((S, 0), np.int64),
+                           np.zeros((S, _N_AXES)), np.ones(S, bool))
+    cap_vec = dev.capacity_vector()
+
+    # cache model: isolated residency is proportional (min(1, C/ws));
+    # colocated STREAMING residency has a thrash cliff — once the combined
+    # working set exceeds capacity, interleaved streams evict each other
+    # before reuse (paper Fig. 3's 16MB peak), so hits collapse.
+    cache_cap = dev.cache_capacity
+    total_ws = ws.sum(1)
+    resident_col = np.where(total_ws > cache_cap, 0.0, 1.0)
+    nk = mask.sum(1)
+    has_ws = ws > 0
+    share = np.where(
+        has_ws & (nk[:, None] > 1), resident_col[:, None],
+        np.where(has_ws, np.minimum(1.0, cache_cap / np.maximum(ws, 1.0)),
+                 1.0))
+
+    eff_col = effective_demand_arrays(demand, ws, hit, cache_cap, share)
+    t_col = isolated_time_arrays(eff_col, duration, cap_vec)
+    eff_iso = effective_demand_arrays(demand, ws, hit, cache_cap,
+                                      np.ones_like(share))
+    t_iso = isolated_time_arrays(eff_iso, duration, cap_vec)
+    u = utilization_arrays(eff_col, t_col, cap_vec)
+    # restricting a kernel to a slot fraction: per-slot axes capacity
+    # seen by that kernel shrinks -> its relative demand grows
+    slot_scale = np.where(frac < 1.0, np.maximum(frac, 1e-6), 1.0)
+    u[:, :, _PER_SLOT_IDX] = u[:, :, _PER_SLOT_IDX] / slot_scale[:, :, None]
+
+    axis_load = u.sum(1)
+
+    # per-axis max-min water-filling: on each oversubscribed axis, only
+    # kernels demanding MORE than the fair rate are throttled (a 0.14-IPC
+    # copy keeps its slots next to a 3.99-IPC hog; both hogs split evenly).
+    # All scenarios advance one freeze-round per iteration; finished ones
+    # are masked out by `done`.
+    speeds = np.ones((S, K))
+    active = mask.copy()
+    frozen = np.full((S, K), -1, np.int64)
+    used = np.zeros((S, _N_AXES))
+    done = np.zeros(S, bool)
+    rows = np.arange(S)
+    for _ in range(K + _N_AXES):
+        dem = (u * (speeds * active)[:, :, None]).sum(1)
+        cap_rem = np.maximum(1.0 - used, 1e-9)
+        ratio = dem / cap_rem
+        worst = ratio.argmax(1)
+        worst_ratio = ratio[rows, worst]
+        done |= worst_ratio <= 1.0 + 1e-9
+        if done.all():
+            break
+        live = ~done
+        u_w = np.take_along_axis(u, worst[:, None, None], axis=2)[:, :, 0]
+        d = speeds * u_w
+
+        # smem: bank-conflict serialization throttles EVERY user equally
+        # (paper Fig. 4: even low-smem-util GEMMs slow down)
+        is_smem = live & (worst == _SMEM)
+        if is_smem.any():
+            users = active & (d > 1e-12) & is_smem[:, None]
+            # only consumed where is_smem (worst_ratio > 1); the floor just
+            # keeps the vector-wide division defined for finished scenarios
+            s_eq = 1.0 / np.maximum(worst_ratio, 1e-30)
+            speeds = np.where(users, speeds * s_eq[:, None], speeds)
+            used += (u * (speeds * users)[:, :, None]).sum(1)
+            frozen = np.where(users, _SMEM, frozen)
+            active &= ~users
+
+        # max-min rate cap theta on worst_axis: sum min(d_n, theta) = cap.
+        # Sort eligible demands ascending; theta is the first even share
+        # breached after granting all smaller demands in full.
+        is_mm = live & (worst != _SMEM)
+        if is_mm.any():
+            elig = active & (d > 1e-12) & is_mm[:, None]
+            cap_w = cap_rem[rows, worst]
+            ds = np.where(elig, d, np.inf)
+            order = np.sort(ds, axis=1)
+            finite = np.isfinite(order)
+            vals = np.where(finite, order, 0.0)
+            csum = np.cumsum(vals, axis=1)
+            m = elig.sum(1)
+            pos = np.arange(K)[None, :]
+            even = (cap_w[:, None] - (csum - vals)) / np.maximum(
+                m[:, None] - pos, 1)
+            breach = finite & (order > even) & (pos < m[:, None])
+            has_theta = breach.any(1) & is_mm
+            theta = even[rows, breach.argmax(1)]
+            # no breach -> every user fits under the fair share: nothing
+            # left to throttle in this scenario
+            done |= is_mm & ~has_theta
+            throttled = elig & has_theta[:, None] & (d > theta[:, None])
+            speeds = np.where(throttled,
+                              speeds * (theta[:, None]
+                                        / np.where(d > 0, d, 1.0)),
+                              speeds)
+            used += (u * (speeds * throttled)[:, :, None]).sum(1)
+            frozen = np.where(throttled, worst[:, None], frozen)
+            active &= ~throttled
+
+    # queueing inflation on near-saturated latency-sensitive axes: applies
+    # to MINORITY users of the axis (the majority owner is fluid-limited)
+    base = (t_col / np.maximum(t_iso, 1e-12)) / np.maximum(speeds, 1e-9)
+    infl = np.ones((S, K))
+    for axis, (gamma, p) in _INFLATION.items():
+        ai = AXIS_INDEX[axis]
+        u_ax = u[:, :, ai]
+        rho = np.minimum(1.0, (speeds * u_ax).sum(1))
+        skip = ((frozen == ai) | (u_ax <= 0.01)
+                | (u_ax >= 0.5 * np.maximum(rho, 1e-9)[:, None]))
+        infl += np.where(~skip & mask, gamma * rho[:, None] ** p, 0.0)
+    slowdowns = base * infl
+
+    tot_slots = slots.sum(1)
+    return BatchResult(
+        names=names,
+        mask=mask,
+        speeds=speeds,
+        slowdowns=slowdowns,
+        bottleneck=frozen,
+        axis_load=axis_load,
+        feasible_slots=(tot_slots <= dev.n_slots) | (tot_slots == 0),
+    )
+
+
+def _compile_scenarios(scenarios: Sequence[Sequence[KernelProfile]],
+                       slot_fractions: Optional[
+                           Sequence[Optional[Dict[str, float]]]]):
+    """Dedup profiles by identity into one ProfileMatrix + index lists."""
+    row_of: Dict[int, int] = {}
+    profiles: List[KernelProfile] = []
+    members: List[List[int]] = []
+    fractions: List[List[float]] = []
+    names: List[List[str]] = []
+    if slot_fractions is None:
+        slot_fractions = [None] * len(scenarios)
+    for sc, sf in zip(scenarios, slot_fractions):
+        sf = sf or {}
+        m, f, ns = [], [], []
+        for k in sc:
+            r = row_of.get(id(k))
+            if r is None:
+                r = row_of[id(k)] = len(profiles)
+                profiles.append(k)
+            m.append(r)
+            f.append(sf.get(k.name, 1.0))
+            ns.append(k.name)
+        if len(set(ns)) != len(ns):
+            # name-keyed results cannot represent duplicate members (the
+            # seed silently collapsed them into one kernel); the
+            # positional solve_batch API handles same-profile colocation
+            raise ValueError(f"duplicate kernel names in scenario: {ns}")
+        members.append(m)
+        fractions.append(f)
+        names.append(ns)
+    return ProfileMatrix.from_profiles(profiles), members, fractions, names
+
+
+def estimate_batch(scenarios: Sequence[Sequence[KernelProfile]],
+                   dev: DeviceModel,
+                   slot_fractions: Optional[
+                       Sequence[Optional[Dict[str, float]]]] = None
+                   ) -> List[ColocationResult]:
+    """Solve many colocation scenarios in one vectorized pass.
+
+    scenarios[i] is the kernel set of scenario i; slot_fractions[i] is its
+    optional per-kernel-name slot-fraction dict (see `estimate`). Returns
+    one ColocationResult per scenario, identical to calling `estimate` on
+    each scenario individually.
+
+    Kernel names must be unique within a scenario (results are keyed by
+    name). To colocate several instances of the same profile, use
+    `solve_batch` with repeated row indices — one row per instance.
+    """
+    if not len(scenarios):
+        return []
+    if slot_fractions is not None and len(slot_fractions) != len(scenarios):
+        raise ValueError(
+            f"slot_fractions has {len(slot_fractions)} entries for "
+            f"{len(scenarios)} scenarios")
+    pm, members, fractions, names = _compile_scenarios(
+        scenarios, slot_fractions)
+    return solve_batch(pm, members, dev, fractions, names).results()
 
 
 def estimate(kernels: Sequence[KernelProfile], dev: DeviceModel,
@@ -83,110 +349,11 @@ def estimate(kernels: Sequence[KernelProfile], dev: DeviceModel,
     slowdown_k = (t_col_k / t_iso_k) / s_k x inflation, where t_col uses
     the COLOCATED cache share (pollution grows demand), s_k is the
     water-filled speed, and inflation is the near-saturation queueing term.
+
+    Thin wrapper over `estimate_batch` with a single scenario — the batch
+    path is the only solver, so scalar and batched results are identical.
     """
-    slot_fraction = slot_fraction or {}
-    names = [k.name for k in kernels]
-    # cache model: isolated residency is proportional (min(1, C/ws));
-    # colocated STREAMING residency has a thrash cliff — once the combined
-    # working set exceeds capacity, interleaved streams evict each other
-    # before reuse (paper Fig. 3's 16MB peak), so hits collapse.
-    total_ws = sum(k.cache_working_set for k in kernels)
-    resident_col = 0.0 if total_ws > dev.cache_capacity else 1.0
-    us = {}
-    t_iso, t_col = {}, {}
-    for k in kernels:
-        share = resident_col if (len(kernels) > 1 and k.cache_working_set) \
-            else min(1.0, dev.cache_capacity / max(k.cache_working_set, 1.0)) \
-            if k.cache_working_set else 1.0
-        u = k.utilization(dev, cache_share=share)
-        frac = slot_fraction.get(k.name, 1.0)
-        if frac < 1.0:
-            for r in PER_SLOT_AXES:
-                u[r] = u[r] / max(frac, 1e-6)
-        us[k.name] = u
-        t_iso[k.name] = k.isolated_time(dev, cache_share=1.0)
-        t_col[k.name] = k.isolated_time(dev, cache_share=share)
-
-    speeds: Dict[str, float] = {n: 1.0 for n in names}
-    frozen: Dict[str, str] = {n: "none" for n in names}
-    axis_load = {r: sum(us[n][r] for n in names) for r in RESOURCE_AXES}
-
-    # per-axis max-min water-filling: on each oversubscribed axis, only
-    # kernels demanding MORE than the fair rate are throttled (a 0.14-IPC
-    # copy keeps its slots next to a 3.99-IPC hog; both hogs split evenly)
-    active = set(names)
-    used = {r: 0.0 for r in RESOURCE_AXES}
-    for _ in range(len(names) + len(RESOURCE_AXES)):
-        worst_axis, worst_ratio = None, 1.0 + 1e-9
-        for r in RESOURCE_AXES:
-            dem = sum(speeds[n] * us[n][r] for n in active)
-            cap = max(1.0 - used[r], 1e-9)
-            if dem / cap > worst_ratio:
-                worst_axis, worst_ratio = r, dem / cap
-        if worst_axis is None:
-            break
-        if worst_axis == "smem":
-            # bank-conflict serialization throttles EVERY user equally
-            # (paper Fig. 4: even low-smem-util GEMMs slow down)
-            s = 1.0 / worst_ratio
-            for n in list(active):
-                if speeds[n] * us[n][worst_axis] > 1e-12:
-                    speeds[n] *= s
-                    frozen[n] = worst_axis
-                    active.discard(n)
-                    for r in RESOURCE_AXES:
-                        used[r] += speeds[n] * us[n][r]
-            continue
-        # max-min rate cap theta on worst_axis: sum min(u_n, theta) = cap
-        users = sorted(active, key=lambda n: speeds[n] * us[n][worst_axis])
-        cap = max(1.0 - used[worst_axis], 1e-9)
-        remaining_cap = cap
-        remaining_users = [n for n in users
-                           if speeds[n] * us[n][worst_axis] > 1e-12]
-        theta = None
-        for idx, n in enumerate(remaining_users):
-            d = speeds[n] * us[n][worst_axis]
-            even = remaining_cap / (len(remaining_users) - idx)
-            if d <= even:
-                remaining_cap -= d
-            else:
-                theta = even
-                break
-        if theta is None:
-            break
-        for n in remaining_users:
-            d = speeds[n] * us[n][worst_axis]
-            if d > theta:
-                scale = theta / d
-                speeds[n] *= scale
-                frozen[n] = worst_axis
-                active.discard(n)
-                for r in RESOURCE_AXES:
-                    used[r] += speeds[n] * us[n][r]
-
-    # queueing inflation on near-saturated latency-sensitive axes: applies
-    # to MINORITY users of the axis (the majority owner is fluid-limited)
-    slowdowns = {}
-    for n in names:
-        base = (t_col[n] / max(t_iso[n], 1e-12)) / max(speeds[n], 1e-9)
-        infl = 1.0
-        for axis, (gamma, p) in _INFLATION.items():
-            u_n = us[n].get(axis, 0.0)
-            rho = min(1.0, sum(speeds[m] * us[m][axis] for m in names))
-            if (frozen.get(n) == axis or u_n <= 0.01
-                    or u_n >= 0.5 * max(rho, 1e-9)):
-                continue
-            infl += gamma * rho ** p
-        slowdowns[n] = base * infl
-
-    slots_needed = sum(k.slots_needed for k in kernels)
-    return ColocationResult(
-        speeds=speeds,
-        slowdowns=slowdowns,
-        bottleneck=frozen,
-        axis_load=axis_load,
-        feasible_slots=slots_needed <= dev.n_slots or slots_needed == 0,
-    )
+    return estimate_batch([list(kernels)], dev, [slot_fraction])[0]
 
 
 def pairwise_slowdown(a: KernelProfile, b: KernelProfile, dev: DeviceModel,
@@ -219,11 +386,25 @@ def workload_slowdown(w: WorkloadProfile, others: Sequence[KernelProfile],
                       slot_fraction: Optional[Dict[str, float]] = None
                       ) -> float:
     """Average slowdown of workload `w` when each of its kernels runs
-    against the (steady) background kernels — per-kernel granularity."""
+    against the (steady) background kernels — per-kernel granularity.
+    One batched solve across all of w's kernels, positional (solve_batch)
+    so a kernel sharing a background kernel's name still contends
+    physically instead of tripping the name-keyed API's duplicate check."""
+    others = list(others)
+    if not w.kernels:
+        return 0.0      # seed semantics: 0-time workload -> 0/1e-12
+    sf = slot_fraction or {}
+    pm = ProfileMatrix.from_profiles(list(w.kernels) + others)
+    n_k = len(w.kernels)
+    other_rows = list(range(n_k, n_k + len(others)))
+    other_fracs = [sf.get(o.name, 1.0) for o in others]
+    members = np.array([[i] + other_rows for i in range(n_k)], np.int64)
+    fractions = np.array([[sf.get(k.name, 1.0)] + other_fracs
+                          for k in w.kernels])
+    br = solve_batch(pm, members, dev, fractions)
     tot_iso = tot_col = 0.0
-    for k in w.kernels:
+    for k, slow in zip(w.kernels, br.slowdowns[:, 0]):
         t = k.isolated_time(dev) * k.duration_weight
-        r = estimate([k, *others], dev, slot_fraction)
         tot_iso += t
-        tot_col += t * r.slowdown(k.name)
+        tot_col += t * float(slow)
     return tot_col / max(tot_iso, 1e-12)

@@ -22,7 +22,10 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Dict
 
+import numpy as np
+
 RESOURCE_AXES = ("mxu", "vpu", "issue", "hbm", "l2", "smem", "ici")
+AXIS_INDEX = {r: i for i, r in enumerate(RESOURCE_AXES)}
 
 
 @dataclass(frozen=True)
@@ -46,6 +49,13 @@ class DeviceModel:
             "issue": self.issue_rate, "hbm": self.hbm_bw,
             "l2": self.l2_bw, "smem": self.smem_bw, "ici": self.ici_bw,
         }[axis]
+
+    def capacity_vector(self) -> np.ndarray:
+        """Per-axis capacities in RESOURCE_AXES order, floored at 1e-9 so
+        division-by-capacity is always defined (e.g. ici_bw=0 models)."""
+        return np.maximum(
+            np.array([self.capacity(r) for r in RESOURCE_AXES], np.float64),
+            1e-9)
 
 
 # --------------------------------------------------------------------- #

@@ -1,23 +1,39 @@
 """Interference-aware colocation planner (paper §5.1).
 
 Given workload profiles with SLOs, the planner:
-  1. builds the pairwise predicted-slowdown matrix with the estimator
-     (per-kernel granularity -> workload-level aggregation),
+  1. builds the pairwise predicted-slowdown matrix with ONE batched
+     estimator solve (per-kernel granularity -> workload-level
+     aggregation) — O(n^2) estimator work total,
   2. greedily pairs workloads to maximize packed throughput subject to
-     every member staying within its SLO slowdown,
+     every member staying within its SLO slowdown; the greedy rounds run
+     over a max-heap of the precomputed pairs with lazy invalidation
+     (each placement just marks its two members used; stale heap entries
+     are discarded on pop), so no pair is ever re-estimated,
   3. optionally allocates slot partitions (the green-context analogue:
      disjoint chip/core fractions) when full-device sharing violates an
      SLO but partitioned sharing does not — trading marginal per-workload
      performance for colocation opportunity (paper §5.3).
+
+The seed implementation re-evaluated every remaining pair from scratch on
+each greedy round — O(n^3) estimator solves. A pair's predicted slowdown
+is independent of which other workloads remain, so the pairwise matrix is
+computed once up front and never changes; the heap replays the exact
+greedy order (gain desc, then first pair in index order) at O(n^2 log n).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+import heapq
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
-from repro.core.estimator import estimate, workload_slowdown
-from repro.core.profile import KernelProfile, WorkloadProfile
+import numpy as np
+
+from repro.core.estimator import solve_batch, workload_slowdown
+from repro.core.profile import KernelProfile, ProfileMatrix, WorkloadProfile
 from repro.core.resources import DeviceModel
+
+_PARTITION_FRACTIONS = (0.25, 0.5, 0.75)
+_PAIR_BLOCK = 16384          # pairs per batched solve: bounds peak memory
 
 
 @dataclass
@@ -43,23 +59,31 @@ def _rep_kernel(w: WorkloadProfile, dev: DeviceModel) -> KernelProfile:
         r: u[r] * dev.capacity(r) * t for r in u})
 
 
+def _pair_metrics(ta, tb, ra, rb, slo_a, slo_b):
+    """Workload-level pair aggregation — the ONE definition of packed
+    gain (serial time / colocated makespan) and SLO feasibility, shared
+    by the scalar evaluate_pair path and _PairEvaluator's array path
+    (both call it; tweak it here and both stay in lockstep)."""
+    gain = (ta + tb) / np.maximum(np.maximum(ta * ra, tb * rb), 1e-12)
+    meets = (ra <= slo_a) & (rb <= slo_b)
+    return gain, meets
+
+
 def evaluate_pair(a: WorkloadProfile, b: WorkloadProfile, dev: DeviceModel,
                   slot_fraction: Optional[Dict[str, float]] = None
                   ) -> Placement:
     ra = workload_slowdown(a, [_rep_kernel(b, dev)], dev, slot_fraction)
     rb = workload_slowdown(b, [_rep_kernel(a, dev)], dev, slot_fraction)
-    slows = {a.name: ra, b.name: rb}
     ta, tb = a.total_time(dev), b.total_time(dev)
-    serial = ta + tb
-    colocated = max(ta * ra, tb * rb)
-    gain = serial / max(colocated, 1e-12)
-    return Placement([a.name, b.name], slot_fraction or {}, slows,
-                     ra <= a.slo_slowdown and rb <= b.slo_slowdown, gain)
+    gain, meets = _pair_metrics(ta, tb, ra, rb,
+                                a.slo_slowdown, b.slo_slowdown)
+    return Placement([a.name, b.name], slot_fraction or {},
+                     {a.name: ra, b.name: rb}, bool(meets), float(gain))
 
 
 def evaluate_pair_partitioned(a: WorkloadProfile, b: WorkloadProfile,
                               dev: DeviceModel,
-                              fractions: Sequence[float] = (0.25, 0.5, 0.75)
+                              fractions: Sequence[float] = _PARTITION_FRACTIONS
                               ) -> Placement:
     """Try full sharing first, then slot partitions (green contexts)."""
     best = evaluate_pair(a, b, dev)
@@ -73,6 +97,105 @@ def evaluate_pair_partitioned(a: WorkloadProfile, b: WorkloadProfile,
     return best
 
 
+class _PairEvaluator:
+    """Batched pair evaluation over a fixed workload set.
+
+    Compiles every workload kernel + representative background kernel into
+    one ProfileMatrix and flat per-kernel arrays, so evaluating a block of
+    pairs is pure array arithmetic: scenario (kernel_row, rep_row) index
+    pairs come from a ragged gather over kernel counts, one `solve_batch`
+    call prices them all, and workload-level slowdowns aggregate back with
+    a segmented sum. No per-pair Python estimator work remains."""
+
+    def __init__(self, works: Sequence[WorkloadProfile], dev: DeviceModel):
+        self.works = list(works)
+        self.dev = dev
+        n = len(self.works)
+        profiles: List[KernelProfile] = []
+        counts, weights = [], []
+        for w in self.works:
+            counts.append(len(w.kernels))
+            for k in w.kernels:
+                profiles.append(k)
+                weights.append(k.isolated_time(dev) * k.duration_weight)
+        self.counts = np.asarray(counts, np.int64)
+        self.offsets = np.concatenate(([0], np.cumsum(self.counts[:-1])))
+        self.kernel_weight = np.asarray(weights, np.float64)
+        self.rep_rows = np.arange(n, dtype=np.int64) + len(profiles)
+        for w in self.works:
+            profiles.append(_rep_kernel(w, dev))
+        self.pm = ProfileMatrix.from_profiles(profiles)
+        self.totals = np.asarray([w.total_time(dev) for w in self.works])
+        self.slos = np.asarray([w.slo_slowdown for w in self.works])
+        # slot-fraction dicts are keyed by KERNEL name (estimate()'s
+        # contract): a member kernel only picks up a workload's fraction
+        # if its name coincides with that workload's name — matching the
+        # seed's evaluate_pair semantics exactly
+        name_to_w = {w.name: wi for wi, w in enumerate(self.works)}
+        self.kernel_name_w = np.asarray(
+            [name_to_w.get(k.name, -1)
+             for w in self.works for k in w.kernels], np.int64)
+
+    def evaluate(self, ia: np.ndarray, ib: np.ndarray,
+                 frac: Optional[float] = None):
+        """Slowdowns/gain/SLO arrays for pairs (ia[p], ib[p]); `frac`
+        gives workload ia a slot fraction of `frac` and ib the complement
+        (None = full sharing), matching evaluate_pair's convention."""
+        P = len(ia)
+        ra = np.empty(P)
+        rb = np.empty(P)
+        for lo in range(0, P, _PAIR_BLOCK):
+            hi = min(lo + _PAIR_BLOCK, P)
+            ra[lo:hi], rb[lo:hi] = self._block(ia[lo:hi], ib[lo:hi], frac)
+        gain, meets = _pair_metrics(self.totals[ia], self.totals[ib], ra, rb,
+                                    self.slos[ia], self.slos[ib])
+        return ra, rb, gain, meets
+
+    def _probe_side(self, probed, other, frac_probed, frac_other):
+        """Scenarios probing `probed`'s kernels against `other`'s rep."""
+        cnt = self.counts[probed]
+        owner = np.repeat(np.arange(len(probed)), cnt)
+        start = np.repeat(np.cumsum(cnt) - cnt, cnt)
+        krow = np.repeat(self.offsets[probed], cnt) \
+            + np.arange(cnt.sum()) - start
+        members = np.stack([krow, np.repeat(self.rep_rows[other], cnt)], 1)
+        if frac_probed is None:
+            fr = None
+        else:
+            # the probed kernel matches the sf dict only by name identity
+            kw = self.kernel_name_w[krow]
+            f0 = np.where(kw == np.repeat(probed, cnt), frac_probed,
+                          np.where(kw == np.repeat(other, cnt), frac_other,
+                                   1.0))
+            fr = np.stack([f0, np.full(len(krow), frac_other)], 1)
+        return members, fr, owner, self.kernel_weight[krow]
+
+    def _block(self, ia, ib, frac):
+        m_a, f_a, own_a, w_a = self._probe_side(
+            ia, ib, frac, None if frac is None else 1.0 - frac)
+        m_b, f_b, own_b, w_b = self._probe_side(
+            ib, ia, None if frac is None else 1.0 - frac, frac)
+        members = np.concatenate([m_a, m_b])
+        fractions = None if frac is None else np.concatenate([f_a, f_b])
+        br = solve_batch(self.pm, members, self.dev, fractions)
+        slow = br.slowdowns[:, 0] * np.concatenate([w_a, w_b])
+        P = len(ia)
+        na, nb = len(m_a), len(m_b)
+        ra = np.bincount(own_a, slow[:na], minlength=P) \
+            / np.maximum(self.totals[ia], 1e-12)
+        rb = np.bincount(own_b, slow[na:na + nb], minlength=P) \
+            / np.maximum(self.totals[ib], 1e-12)
+        return ra, rb
+
+    def placement(self, i: int, j: int, ra: float, rb: float, gain: float,
+                  meets: bool, frac: Optional[float]) -> Placement:
+        a, b = self.works[i], self.works[j]
+        sf = {} if frac is None else {a.name: frac, b.name: 1.0 - frac}
+        return Placement([a.name, b.name], sf,
+                         {a.name: float(ra), b.name: float(rb)},
+                         bool(meets), float(gain))
+
+
 @dataclass
 class Plan:
     placements: List[Placement]
@@ -80,30 +203,65 @@ class Plan:
 
     @property
     def total_gain(self) -> float:
-        n_works = sum(len(p.workloads) for p in self.placements) + len(self.solo)
-        packed = len(self.placements) + len(self.solo)
-        return n_works / max(packed, 1)
+        """Mean packed-throughput gain per occupied device: each placement
+        contributes its members' predicted gain (serial time / colocated
+        makespan), each solo workload contributes 1.0."""
+        devices = len(self.placements) + len(self.solo)
+        if devices == 0:
+            return 1.0
+        gains = sum(p.throughput_gain for p in self.placements)
+        return (gains + len(self.solo)) / devices
 
 
 def plan_colocation(workloads: Sequence[WorkloadProfile], dev: DeviceModel,
                     allow_partition: bool = True) -> Plan:
-    """Greedy max-gain SLO-feasible pairing."""
-    remaining = {w.name: w for w in workloads}
+    """Greedy max-gain SLO-feasible pairing, O(n^2) estimator work."""
+    uniq = {w.name: w for w in workloads}        # last-wins, like the seed
+    works = list(uniq.values())
+    names = [w.name for w in works]
+    n = len(works)
+    if n < 2:
+        return Plan([], sorted(names))
+
+    ev = _PairEvaluator(works, dev)
+    iu, ju = np.triu_indices(n, k=1)             # pairs in (i, j) lex order
+    ra, rb, gain, meets = ev.evaluate(iu, ju)    # full-sharing pass
+    frac = np.full(len(iu), np.nan)              # nan = full sharing
+
+    if allow_partition:
+        # green-context fallback for SLO-violating pairs: same selection
+        # rule as evaluate_pair_partitioned, batched per fraction
+        failing = np.flatnonzero(~meets)
+        if failing.size:
+            fia, fib = iu[failing], ju[failing]
+            best_gain = np.zeros(failing.size)   # full share failed -> 0
+            for f in _PARTITION_FRACTIONS:
+                cra, crb, cgain, cmeets = ev.evaluate(fia, fib, frac=f)
+                take = cmeets & (cgain > best_gain)
+                best_gain = np.where(take, cgain, best_gain)
+                sel = failing[take]
+                ra[sel], rb[sel] = cra[take], crb[take]
+                gain[sel], meets[sel] = cgain[take], True
+                frac[sel] = f
+
+    # greedy rounds over the precomputed matrix: max-heap keyed by
+    # (gain desc, pair index asc) replays the seed's exact pick order;
+    # placements invalidate their members' rows lazily (skip on pop)
+    feas = np.flatnonzero(meets)
+    heap = list(zip(-gain[feas], iu[feas], ju[feas], feas))
+    heapq.heapify(heap)
+    placed = np.zeros(n, bool)
     placements: List[Placement] = []
-    while len(remaining) >= 2:
-        names = list(remaining)
-        best: Optional[Placement] = None
-        for i in range(len(names)):
-            for j in range(i + 1, len(names)):
-                a, b = remaining[names[i]], remaining[names[j]]
-                p = (evaluate_pair_partitioned(a, b, dev) if allow_partition
-                     else evaluate_pair(a, b, dev))
-                if p.meets_slo and (best is None
-                                    or p.throughput_gain > best.throughput_gain):
-                    best = p
-        if best is None or best.throughput_gain <= 1.0:
+    while heap:
+        neg_gain, i, j, p = heapq.heappop(heap)
+        if placed[i] or placed[j]:
+            continue
+        if -neg_gain <= 1.0:
             break
-        placements.append(best)
-        for n in best.workloads:
-            remaining.pop(n)
-    return Plan(placements, sorted(remaining))
+        f = frac[p]
+        placements.append(ev.placement(
+            int(i), int(j), ra[p], rb[p], gain[p], True,
+            None if np.isnan(f) else float(f)))
+        placed[i] = placed[j] = True
+    solo = sorted(names[i] for i in np.flatnonzero(~placed))
+    return Plan(placements, solo)

@@ -11,14 +11,17 @@ On real hardware the same sweep runs the Pallas stressor kernels
 (repro.kernels.stressors) next to the workload; here the estimator
 provides the predicted curves, and benchmarks/ validates the estimator
 against the paper's measured GPU numbers.
+
+A full fingerprint (axes x lambda grid) is ONE batched estimator solve
+(`sensitivity_batch` fingerprints many kernels in a single pass).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Dict, List, Sequence
 
-from repro.core.estimator import estimate
-from repro.core.profile import KernelProfile
+from repro.core.estimator import solve_batch
+from repro.core.profile import KernelProfile, ProfileMatrix
 from repro.core.resources import RESOURCE_AXES, DeviceModel
 
 
@@ -50,31 +53,52 @@ class SensitivityReport:
         return self.ranked()[0]
 
 
+def sensitivity_batch(kernels: Sequence[KernelProfile], dev: DeviceModel,
+                      lambdas: Sequence[float] = (0.1, 0.25, 0.5, 0.75, 0.9),
+                      axes: Sequence[str] = RESOURCE_AXES
+                      ) -> List[SensitivityReport]:
+    """Fingerprint every kernel in one batched solve: scenarios are the
+    (kernel x axis x lambda) grid, each pairing the kernel with the
+    matching single-axis stressor."""
+    kernels = list(kernels)
+    if not kernels:
+        return []
+    stressors = [stressor(axis, lam, dev) for axis in axes for lam in lambdas]
+    pm = ProfileMatrix.from_profiles(kernels + stressors)
+    members = [[ki, len(kernels) + si]
+               for ki in range(len(kernels))
+               for si in range(len(stressors))]
+    br = solve_batch(pm, members, dev)
+    slow = br.slowdowns[:, 0].reshape(len(kernels), len(axes), len(lambdas))
+    reports = []
+    for ki, k in enumerate(kernels):
+        curves = {a: [float(s) for s in slow[ki, ai]]
+                  for ai, a in enumerate(axes)}
+        scores = {a: curves[a][-1] for a in axes}
+        reports.append(SensitivityReport(k.name, curves, list(lambdas),
+                                         scores))
+    return reports
+
+
 def sensitivity(kernel: KernelProfile, dev: DeviceModel,
                 lambdas: Sequence[float] = (0.1, 0.25, 0.5, 0.75, 0.9),
                 axes: Sequence[str] = RESOURCE_AXES) -> SensitivityReport:
-    curves: Dict[str, List[float]] = {}
-    for axis in axes:
-        row = []
-        for lam in lambdas:
-            st = stressor(axis, lam, dev)
-            r = estimate([kernel, st], dev)
-            row.append(r.slowdown(kernel.name))
-        curves[axis] = row
-    scores = {a: curves[a][-1] for a in axes}
-    return SensitivityReport(kernel.name, curves, list(lambdas), scores)
+    return sensitivity_batch([kernel], dev, lambdas, axes)[0]
 
 
 def cache_pollution_curve(kernel: KernelProfile, dev: DeviceModel,
                           polluter_ws: Sequence[float]) -> List[float]:
-    """Paper Fig. 3: slowdown of `kernel` vs a polluter's working set."""
-    out = []
-    for ws in polluter_ws:
-        pol = KernelProfile(
-            "polluter",
-            demand={**{r: 0.0 for r in RESOURCE_AXES},
-                    "hbm": dev.hbm_bw * 0.5, "l2": dev.l2_bw * 0.5},
-            cache_working_set=ws, cache_hit_fraction=1.0)
-        r = estimate([kernel, pol], dev)
-        out.append(r.slowdown(kernel.name))
-    return out
+    """Paper Fig. 3: slowdown of `kernel` vs a polluter's working set —
+    the whole sweep is one batched solve."""
+    polluter_ws = list(polluter_ws)
+    if not polluter_ws:
+        return []
+    base_demand = {**{r: 0.0 for r in RESOURCE_AXES},
+                   "hbm": dev.hbm_bw * 0.5, "l2": dev.l2_bw * 0.5}
+    polluters = [KernelProfile("polluter", demand=base_demand,
+                               cache_working_set=ws, cache_hit_fraction=1.0)
+                 for ws in polluter_ws]
+    pm = ProfileMatrix.from_profiles([kernel] + polluters)
+    members = [[0, 1 + i] for i in range(len(polluters))]
+    br = solve_batch(pm, members, dev)
+    return [float(s) for s in br.slowdowns[:, 0]]

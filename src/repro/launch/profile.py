@@ -11,7 +11,7 @@ import argparse
 import json
 from pathlib import Path
 
-from repro.core import TPU_V5E, plan_colocation, sensitivity
+from repro.core import TPU_V5E, plan_colocation, sensitivity_batch
 from repro.core.profile import WorkloadProfile, from_dryrun_json
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
@@ -42,8 +42,8 @@ def main(argv=None):
         return
     print(f"{'phase':44s} {'bottleneck':11s} sensitivity fingerprint "
           f"(slowdown @ 90% stressor)")
-    for p in profs:
-        rep = sensitivity(p, TPU_V5E)
+    # all phases' fingerprints in one batched estimator solve
+    for p, rep in zip(profs, sensitivity_batch(profs, TPU_V5E)):
         fp = " ".join(f"{a}:{rep.scores[a]:.2f}" for a in rep.ranked()[:4])
         print(f"{p.name:44s} {p.bottleneck(TPU_V5E):11s} {fp}")
 

@@ -23,8 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import TPU_V5E, DeviceModel, KernelProfile, estimate
-from repro.core.resources import RESOURCE_AXES
+from repro.core import TPU_V5E, DeviceModel, ProfileMatrix
+from repro.core.resources import AXIS_INDEX, RESOURCE_AXES
 from repro.models import LOCAL_CTX, ParallelContext, build_model
 from repro.models import transformer as tfm
 from repro.models.layers import rmsnorm, unembed, embed
@@ -108,22 +108,27 @@ class Engine:
         return seq.seq_id
 
     # --------------------- interference model --------------------- #
-    def _phase_profile(self, name: str, n_tokens: int) -> KernelProfile:
-        """Analytic per-call resource vector: weight reads dominate decode;
-        matmul FLOPs dominate prefill chunks."""
+    def _phase_matrix(self, names, n_tokens) -> ProfileMatrix:
+        """Analytic per-call resource vectors, one row per token count:
+        weight reads dominate decode; matmul FLOPs dominate prefill
+        chunks. Dense form so every chunk candidate prices in one pass."""
+        n_tokens = np.asarray(n_tokens, np.float64)
         n_active = self.cfg.n_active_params()
         flops = 2.0 * n_active * n_tokens
-        weight_bytes = 2.0 * n_active
-        kv_bytes = 2e5 * n_tokens
-        d = {r: 0.0 for r in RESOURCE_AXES}
-        d.update(mxu=flops, vpu=flops / 50, issue=flops / 256,
-                 hbm=weight_bytes + kv_bytes, l2=weight_bytes + kv_bytes,
-                 ici=0.0)
-        return KernelProfile(name, demand=d)
+        bytes_ = 2.0 * n_active + 2e5 * n_tokens   # weights + kv traffic
+        demand = np.zeros((len(names), len(RESOURCE_AXES)))
+        demand[:, AXIS_INDEX["mxu"]] = flops
+        demand[:, AXIS_INDEX["vpu"]] = flops / 50
+        demand[:, AXIS_INDEX["issue"]] = flops / 256
+        demand[:, AXIS_INDEX["hbm"]] = bytes_
+        demand[:, AXIS_INDEX["l2"]] = bytes_
+        return ProfileMatrix.from_arrays(names, demand)
 
     def _pick_chunk(self, seq: Sequence, n_active_decodes: int) -> int:
         """Largest chunk whose colocation keeps predicted decode TBT within
-        the SLO (paper §5.1 estimator-in-the-loop)."""
+        the SLO (paper §5.1 estimator-in-the-loop). All halving candidates
+        are priced in ONE batched ProfileMatrix solve instead of a
+        re-profile per halving step."""
         remaining = seq.prompt_len - seq.pos
         if self.ecfg.mode == "serial":
             return remaining
@@ -131,19 +136,26 @@ class Engine:
             return min(self.ecfg.prefill_chunk, remaining)
         if n_active_decodes == 0:
             return min(self.ecfg.prefill_chunk * 4, remaining)
-        decode_prof = self._phase_profile("decode", max(n_active_decodes, 1))
-        tbt_iso = decode_prof.isolated_time(self.dev)
-        slo = self.ecfg.tbt_slo_ms / 1e3
         chunk = min(self.ecfg.prefill_chunk, remaining)
+        cands = []
         while chunk > 16:
-            pf = self._phase_profile("prefill", chunk)
-            # serialized-on-one-core model: chunk time adds to the TBT of
-            # the decode step it is interleaved with
-            tbt_pred = tbt_iso + pf.isolated_time(self.dev)
-            if tbt_pred <= max(slo, tbt_iso * 1.5):
-                break
+            cands.append(chunk)
             chunk //= 2
-        return max(chunk, 16)
+        if not cands:
+            return max(chunk, 16)
+        pm = self._phase_matrix(
+            ["decode"] + [f"prefill{c}" for c in cands],
+            [max(n_active_decodes, 1)] + cands)
+        ts = pm.isolated_time(self.dev)
+        tbt_iso = ts[0]
+        # serialized-on-one-core model: chunk time adds to the TBT of the
+        # decode step it is interleaved with
+        ok = tbt_iso + ts[1:] <= max(self.ecfg.tbt_slo_ms / 1e3,
+                                     tbt_iso * 1.5)
+        passing = np.flatnonzero(ok)
+        if passing.size:
+            return cands[passing[0]]
+        return max(cands[-1] // 2, 16)
 
     # ----------------------------- loop --------------------------- #
     def step(self) -> bool:

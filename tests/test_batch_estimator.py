@@ -1,0 +1,201 @@
+"""Equivalence of the vectorized batch estimator/planner with the scalar
+seed implementation (kept verbatim in benchmarks/_seed_reference.py).
+
+Property-style randomized coverage (fixed seeds, no hypothesis needed):
+  * estimate() (wrapper) vs estimate_batch() — identical by construction,
+    asserted anyway at 1e-9 across mixed-size batches;
+  * both vs the SEED pure-Python estimator at 1e-9, including slot
+    fractions, cache-thrash cliffs, and the smem equal-throttle branch;
+  * the incremental O(n^2) planner vs the seed O(n^3) planner: identical
+    Plan (same placements in order, slowdowns/gains at 1e-9);
+  * batched sensitivity vs the seed per-scenario sweep.
+"""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "benchmarks"))
+import _seed_reference as seed  # noqa: E402
+# shared with the benchmark so oracle tests and perf numbers fuzz the
+# same input distribution (single source of truth for the generators)
+from bench_planner import (assert_plans_equal, random_profile,  # noqa: E402
+                           random_workloads)
+
+from repro.core import (H100, TPU_V5E, KernelProfile,  # noqa: E402
+                        estimate, estimate_batch, plan_colocation,
+                        sensitivity)
+from repro.core.resources import RESOURCE_AXES  # noqa: E402
+from repro.core.scheduler import evaluate_pair, evaluate_pair_partitioned  # noqa: E402
+
+TOL = 1e-9
+
+
+def random_fraction_scenarios(rng, dev, n, max_kernels=4, with_fractions=True):
+    """Scenario + slot-fraction batches (distinct from bench_planner's
+    plain random_scenarios). Continuous random draws — branch decisions
+    (argmax axis, theta prefix) are almost surely untied, so seed/batch
+    rounding differences cannot flip them."""
+    scenarios, fractions = [], []
+    for s in range(n):
+        k = int(rng.integers(1, max_kernels + 1))
+        sc = [random_profile(rng, f"s{s}k{i}", dev, zero_axes=True,
+                             smem_heavy=rng.random() < 0.25,
+                             cache_heavy=rng.random() < 0.25)
+              for i in range(k)]
+        sf = None
+        if with_fractions and rng.random() < 0.4:
+            sf = {p.name: float(rng.uniform(0.1, 1.0)) for p in sc
+                  if rng.random() < 0.7}
+        scenarios.append(sc)
+        fractions.append(sf)
+    return scenarios, fractions
+
+
+def assert_results_equal(got, want, tol=TOL):
+    assert set(got.slowdowns) == set(want.slowdowns)
+    for n in want.slowdowns:
+        assert got.slowdowns[n] == pytest.approx(want.slowdowns[n],
+                                                 rel=tol, abs=tol), n
+        assert got.speeds[n] == pytest.approx(want.speeds[n],
+                                              rel=tol, abs=tol), n
+        assert got.bottleneck[n] == want.bottleneck[n], n
+    for r in want.axis_load:
+        assert got.axis_load[r] == pytest.approx(want.axis_load[r],
+                                                 rel=tol, abs=tol), r
+    assert got.feasible_slots == want.feasible_slots
+
+
+@pytest.mark.parametrize("dev", [TPU_V5E, H100], ids=lambda d: d.name)
+def test_estimate_matches_seed_randomized(dev):
+    rng = np.random.default_rng(0)
+    scenarios, fractions = random_fraction_scenarios(rng, dev, n=150)
+    for sc, sf in zip(scenarios, fractions):
+        got = estimate(sc, dev, sf)
+        want = seed.estimate(sc, dev, sf)
+        assert_results_equal(got, want)
+
+
+@pytest.mark.parametrize("dev", [TPU_V5E, H100], ids=lambda d: d.name)
+def test_estimate_batch_matches_looped_estimate(dev):
+    """Batching mixed-size scenarios together must not perturb any single
+    solve (padding is inert)."""
+    rng = np.random.default_rng(1)
+    scenarios, fractions = random_fraction_scenarios(rng, dev, n=120, max_kernels=5)
+    batched = estimate_batch(scenarios, dev, fractions)
+    for sc, sf, got in zip(scenarios, fractions, batched):
+        assert_results_equal(got, estimate(sc, dev, sf), tol=0.0)
+
+
+def test_smem_equal_throttle_branch():
+    """Two smem-saturating kernels + a light GEMM: the seed's equal-
+    throttle branch must be reproduced exactly, including the freeze
+    bookkeeping that the later axes see."""
+    rng = np.random.default_rng(2)
+    smem_hits = 0
+    for trial in range(40):
+        sc = [random_profile(rng, f"t{trial}k{i}", H100, smem_heavy=True)
+              for i in range(3)]
+        got, want = estimate(sc, H100), seed.estimate(sc, H100)
+        assert_results_equal(got, want)
+        smem_hits += "smem" in set(want.bottleneck.values())
+    # another axis may legitimately freeze first in some trials, but the
+    # equal-throttle branch must be exercised by the bulk of them
+    assert smem_hits >= 20, smem_hits
+
+
+def test_cache_thrash_cliff():
+    """Crossing the combined-working-set cliff flips the colocated cache
+    share to zero — both paths must agree on both sides of the cliff."""
+    for mb in (4, 8, 16, 26, 48, 80):
+        ws = 2 * mb * 1e6
+        d = {r: 0.0 for r in RESOURCE_AXES}
+        d.update(hbm=0.9 * H100.hbm_bw, l2=0.4 * H100.l2_bw,
+                 issue=0.2 * H100.issue_rate)
+        sc = [KernelProfile(n, demand=dict(d), duration=1.0,
+                            cache_working_set=ws, cache_hit_fraction=0.95)
+              for n in ("a", "b")]
+        assert_results_equal(estimate(sc, H100), seed.estimate(sc, H100))
+
+
+def test_slot_fraction_branch():
+    k = KernelProfile("c", demand={**{r: 0.0 for r in RESOURCE_AXES},
+                                   "issue": 0.99 * H100.issue_rate,
+                                   "vpu": 0.5 * H100.vpu_flops},
+                      duration=1.0)
+    for f in (0.0625, 0.25, 0.5, 1.0):
+        got = estimate([k], H100, {"c": f})
+        want = seed.estimate([k], H100, {"c": f})
+        assert_results_equal(got, want)
+
+
+@pytest.mark.parametrize("allow_partition", [True, False])
+def test_planner_matches_seed(allow_partition):
+    rng = np.random.default_rng(3)
+    works = random_workloads(rng, 12, TPU_V5E)
+    got = plan_colocation(works, TPU_V5E, allow_partition)
+    want = seed.plan_colocation(works, TPU_V5E, allow_partition)
+    assert_plans_equal(got, want)
+
+
+def test_pair_evaluation_matches_seed():
+    rng = np.random.default_rng(4)
+    works = random_workloads(rng, 6, TPU_V5E)
+    for i in range(len(works)):
+        for j in range(i + 1, len(works)):
+            for fn_new, fn_seed in ((evaluate_pair, seed.evaluate_pair),
+                                    (evaluate_pair_partitioned,
+                                     seed.evaluate_pair_partitioned)):
+                g = fn_new(works[i], works[j], TPU_V5E)
+                w = fn_seed(works[i], works[j], TPU_V5E)
+                assert g.workloads == w.workloads
+                assert g.meets_slo == w.meets_slo
+                assert g.slot_fraction == w.slot_fraction
+                assert g.throughput_gain == pytest.approx(
+                    w.throughput_gain, rel=TOL, abs=TOL)
+
+
+def test_sensitivity_matches_seed_loop():
+    """The batched (axes x lambda) fingerprint equals the seed's one-
+    scenario-at-a-time sweep."""
+    from repro.core.sensitivity import stressor
+    rng = np.random.default_rng(5)
+    k = random_profile(rng, "probe", TPU_V5E)
+    rep = sensitivity(k, TPU_V5E)
+    for ai, axis in enumerate(RESOURCE_AXES):
+        for li, lam in enumerate(rep.lambdas):
+            want = seed.estimate([k, stressor(axis, lam, TPU_V5E)],
+                                 TPU_V5E).slowdowns["probe"]
+            assert rep.curves[axis][li] == pytest.approx(want, rel=TOL,
+                                                         abs=TOL)
+
+
+def test_duplicate_kernel_names_rejected():
+    """The seed silently collapsed same-named kernels into one (name-keyed
+    dicts); the batch path refuses them instead — the positional
+    `solve_batch` API is the supported route for same-profile colocation,
+    and there both instances genuinely contend."""
+    from repro.core.estimator import solve_batch
+    from repro.core.profile import ProfileMatrix
+    k = KernelProfile("dup", demand={**{r: 0.0 for r in RESOURCE_AXES},
+                                     "mxu": 0.9 * TPU_V5E.mxu_flops},
+                      duration=1.0)
+    with pytest.raises(ValueError, match="duplicate kernel names"):
+        estimate([k, k], TPU_V5E)
+    pm = ProfileMatrix.from_profiles([k])
+    br = solve_batch(pm, np.array([[0, 0]]), TPU_V5E)
+    # both instances throttle to the fair share: speed 0.5/0.9 each
+    assert br.slowdowns[0, 0] == pytest.approx(1.8, rel=1e-6)
+    assert br.slowdowns[0, 1] == pytest.approx(br.slowdowns[0, 0])
+
+
+def test_plan_total_gain_uses_member_gains():
+    """Regression for the seed bug: total_gain counted workloads per
+    device slot instead of the placements' predicted gains."""
+    from repro.core.scheduler import Placement, Plan
+    p1 = Placement(["a", "b"], {}, {"a": 1.1, "b": 1.2}, True, 1.8)
+    p2 = Placement(["c", "d"], {}, {"c": 1.0, "d": 1.0}, True, 1.4)
+    plan = Plan([p1, p2], ["e"])
+    assert plan.total_gain == pytest.approx((1.8 + 1.4 + 1.0) / 3)
+    assert Plan([], []).total_gain == 1.0

@@ -1,4 +1,8 @@
 """Property-based tests (hypothesis) on system invariants."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
