@@ -12,7 +12,7 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core import (TPU_V5E, WorkloadProfile, plan_colocation,
+from repro.core import (TPU_V5E, ColocationScheduler, WorkloadProfile,
                         sensitivity_batch)
 from repro.core.profile import from_dryrun_json
 
@@ -84,7 +84,10 @@ def colocation_plan() -> List[Row]:
     if not works:
         return [("colocation_plan", 0.0, "no-dryrun-artifacts")]
     t0 = time.perf_counter()
-    plan = plan_colocation(works[:12], TPU_V5E)
+    sched = ColocationScheduler(TPU_V5E)
+    for w in works[:12]:
+        sched.submit(w)
+    plan = sched.plan()
     us = (time.perf_counter() - t0) * 1e6
     pairs = "; ".join("+".join(p.workloads) for p in plan.placements[:4])
     return [("colocation_plan_12phases", us,

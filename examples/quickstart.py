@@ -3,12 +3,14 @@
 1. Build resource profiles for two workload phases (an MXU-bound prefill
    and an HBM-bound decode) on the TPU v5e resource model.
 2. Quantify each phase's interference sensitivity (the paper's §4 sweep).
-3. Ask the colocation planner whether they can share a slice within SLO.
+3. Run the ONLINE colocation scheduler: workloads arrive and leave, and
+   `plan()` incrementally re-places them (k-way groups, SLO-guarded).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import (TPU_V5E, KernelProfile, WorkloadProfile,
-                        estimate_batch, plan_colocation, sensitivity_batch)
+from repro.core import (TPU_V5E, ColocationScheduler, KernelProfile,
+                        Scenario, WorkloadProfile, sensitivity_batch,
+                        solve_scenarios)
 from repro.core.resources import RESOURCE_AXES
 
 
@@ -31,19 +33,34 @@ def main():
         tops = ", ".join(f"{a}={rep.scores[a]:.2f}x" for a in rep.ranked()[:3])
         print(f"  {p.name:12s} dominant axis: {rep.dominant():6s} ({tops})")
 
-    print("\n== pairwise colocation predictions (one batched solve) ==")
+    print("\n== pairwise colocation predictions (one Scenario batch) ==")
     pairs = ((prefill, decode), (prefill, train), (decode, train))
-    for (a, b), r in zip(pairs, estimate_batch(pairs, TPU_V5E)):
+    br = solve_scenarios([Scenario((a, b)) for a, b in pairs], TPU_V5E)
+    for s, (a, b) in enumerate(pairs):
         print(f"  {a.name:12s} + {b.name:12s} -> "
-              + ", ".join(f"{k}: {v:.2f}x" for k, v in r.slowdowns.items()))
+              f"{a.name}: {br.slowdowns[s, 0]:.2f}x, "
+              f"{b.name}: {br.slowdowns[s, 1]:.2f}x")
 
-    print("\n== planner (SLO: 1.3x) ==")
-    works = [WorkloadProfile(p.name, (p,), slo_slowdown=1.3)
-             for p in (prefill, decode, train)]
-    plan = plan_colocation(works, TPU_V5E)
+    print("\n== online scheduler (SLO: 1.3x, up to 3-way groups) ==")
+    sched = ColocationScheduler(TPU_V5E, max_group_size=3)
+    for p in (prefill, decode, train):
+        sched.submit(WorkloadProfile(p.name, (p,), slo_slowdown=1.3))
+    plan = sched.plan()
     for pl in plan.placements:
         print("  colocate:", pl)
     print("  run solo:", plan.solo)
+
+    sched.remove("train_step")          # departure: zero estimator work
+    sched.submit(WorkloadProfile(       # arrival: prices only its row
+        "decode_b", (phase("decode_b", mxu=0.03, hbm=0.30, issue=0.08),),
+        slo_slowdown=1.3))
+    plan = sched.plan()
+    print("  after train_step leaves and decode_b arrives:")
+    for pl in plan.placements:
+        print("    colocate:", pl)
+    print("    run solo:", plan.solo)
+    print(f"  estimator scenarios solved so far: "
+          f"{sched.stats['scenarios_solved']}")
 
 
 if __name__ == "__main__":

@@ -2,14 +2,16 @@
 
 Runs the same request mix through the engine in `serial` mode (monolithic
 prefills -> head-of-line blocking of the decode batch) and in
-`interference_aware` mode (prefill chunks sized by the estimator so the
-decode batch's TBT stays within SLO), and compares decode-gap statistics.
+`interference_aware` mode (prefill chunks sized per-step by pricing
+decode-vs-chunk `Scenario`s so the decode batch's TBT stays within SLO),
+and compares decode-gap statistics.
 
 Run:  PYTHONPATH=src python examples/serve_colocation.py
 """
 import numpy as np
 
 from repro.configs.registry import get_config, tiny_config
+from repro.core import Scenario, solve_scenarios
 from repro.serve import Engine, EngineConfig
 
 
@@ -47,6 +49,21 @@ def run(mode: str):
     return interleaved
 
 
+def show_chunk_pricing():
+    """The engine's per-step decision, spelled out: one Scenario per
+    chunk candidate (victim = decode batch, background = the chunk)."""
+    cfg = tiny_config(get_config("qwen3-1.7b"))
+    eng = Engine(cfg, ecfg=EngineConfig())
+    decode = eng._phase_profile("decode", 3)
+    cands = [256, 128, 64, 32]
+    chunks = [eng._phase_profile(f"prefill{c}", c) for c in cands]
+    br = solve_scenarios([Scenario((decode,), (ch,)) for ch in chunks],
+                         eng.dev)
+    print("\nchunk-size pricing (decode batch of 3):")
+    for c, s in zip(cands, br.slowdowns[:, 0]):
+        print(f"  chunk {c:4d} -> predicted decode slowdown {s:.2f}x")
+
+
 def main():
     i_serial = run("serial")
     i_aware = run("interference_aware")
@@ -54,6 +71,7 @@ def main():
           f"during the long prefill; interference-aware interleaves "
           f"{i_aware} (decode batch keeps flowing)")
     assert i_aware > i_serial
+    show_chunk_pricing()
 
 
 if __name__ == "__main__":

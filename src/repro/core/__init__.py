@@ -2,11 +2,15 @@
 quantification and colocation scheduling. See DESIGN.md §1-2."""
 from repro.core.resources import DEVICES, H100, RTX3090, TPU_V5E, DeviceModel  # noqa: F401
 from repro.core.profile import KernelProfile, ProfileMatrix, WorkloadProfile  # noqa: F401
+from repro.core.scenario import (CompiledScenarios, Scenario,  # noqa: F401
+                                 compile_scenarios)
 from repro.core.estimator import (BatchResult, ColocationResult,  # noqa: F401
                                   colocation_speedup, estimate,
                                   estimate_batch, pairwise_slowdown,
-                                  workload_slowdown)
+                                  solve_scenarios, workload_slowdown)
 from repro.core.sensitivity import (SensitivityReport, cache_pollution_curve,  # noqa: F401
                                     sensitivity, sensitivity_batch, stressor)
-from repro.core.scheduler import (Plan, Placement, evaluate_pair,  # noqa: F401
-                                  evaluate_pair_partitioned, plan_colocation)
+from repro.core.scheduler import (ColocationScheduler, Plan, Placement,  # noqa: F401
+                                  evaluate_group, evaluate_group_partitioned,
+                                  evaluate_pair, evaluate_pair_partitioned,
+                                  plan_colocation)

@@ -42,6 +42,7 @@ from repro.core.profile import (KernelProfile, ProfileMatrix,
                                 WorkloadProfile, effective_demand_arrays,
                                 isolated_time_arrays, utilization_arrays)
 from repro.core.resources import AXIS_INDEX, RESOURCE_AXES, DeviceModel
+from repro.core.scenario import Scenario, compile_scenarios, scenario_device
 
 PER_SLOT_AXES = ("mxu", "vpu", "issue", "smem")
 DEVICE_AXES = ("hbm", "l2", "ici")
@@ -281,6 +282,27 @@ def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
     )
 
 
+def solve_scenarios(scenarios: Sequence[Scenario],
+                    dev: Optional[DeviceModel] = None) -> BatchResult:
+    """Solve a batch of `Scenario` objects (the shared query currency —
+    see repro.core.scenario) in one vectorized pass.
+
+    Members are ordered victims-first, so scenario ``s``'s victim
+    slowdowns are ``result.slowdowns[s, :scenarios[s].n_victims]``.
+    Results are positional, so duplicate kernel names (or the same
+    profile colocated with itself) are fine — unlike the name-keyed
+    `estimate_batch`.
+    """
+    scenarios = list(scenarios)
+    if not scenarios:
+        # dev is irrelevant for an empty batch; solve_batch returns the
+        # canonical empty BatchResult before ever touching it
+        return solve_batch(ProfileMatrix.from_profiles([]), [], dev)
+    dev = scenario_device(scenarios, dev)
+    comp = compile_scenarios(scenarios)
+    return solve_batch(comp.pm, comp.members, dev, comp.fractions)
+
+
 def _compile_scenarios(scenarios: Sequence[Sequence[KernelProfile]],
                        slot_fractions: Optional[
                            Sequence[Optional[Dict[str, float]]]]):
@@ -387,21 +409,15 @@ def workload_slowdown(w: WorkloadProfile, others: Sequence[KernelProfile],
                       ) -> float:
     """Average slowdown of workload `w` when each of its kernels runs
     against the (steady) background kernels — per-kernel granularity.
-    One batched solve across all of w's kernels, positional (solve_batch)
-    so a kernel sharing a background kernel's name still contends
-    physically instead of tripping the name-keyed API's duplicate check."""
-    others = list(others)
+    One `Scenario` per kernel of `w` (victim = the kernel, background =
+    the steady co-runners), solved positionally in one batch so a kernel
+    sharing a background kernel's name still contends physically instead
+    of tripping the name-keyed API's duplicate check."""
+    others = tuple(others)
     if not w.kernels:
         return 0.0      # seed semantics: 0-time workload -> 0/1e-12
-    sf = slot_fraction or {}
-    pm = ProfileMatrix.from_profiles(list(w.kernels) + others)
-    n_k = len(w.kernels)
-    other_rows = list(range(n_k, n_k + len(others)))
-    other_fracs = [sf.get(o.name, 1.0) for o in others]
-    members = np.array([[i] + other_rows for i in range(n_k)], np.int64)
-    fractions = np.array([[sf.get(k.name, 1.0)] + other_fracs
-                          for k in w.kernels])
-    br = solve_batch(pm, members, dev, fractions)
+    br = solve_scenarios([Scenario((k,), others, slot_fraction)
+                          for k in w.kernels], dev)
     tot_iso = tot_col = 0.0
     for k, slow in zip(w.kernels, br.slowdowns[:, 0]):
         t = k.isolated_time(dev) * k.duration_weight

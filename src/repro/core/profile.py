@@ -98,6 +98,16 @@ class WorkloadProfile:
                 u[r] += ku[r] * (t / max(tot, 1e-12))
         return u
 
+    def representative_kernel(self, dev: DeviceModel) -> KernelProfile:
+        """Time-weighted aggregate kernel, named after the workload: the
+        steady-background stand-in the scheduler prices co-runners
+        against (and the slot-fraction anchor — fraction dicts keyed by
+        the workload name bind to this kernel)."""
+        u = self.mixed_utilization(dev)
+        t = self.total_time(dev)
+        return KernelProfile(self.name, demand={
+            r: u[r] * dev.capacity(r) * t for r in u})
+
 
 # --------------------------------------------------------------------- #
 #  ProfileMatrix — dense (kernels x axes) compilation of KernelProfiles  #

@@ -1,36 +1,51 @@
-"""Interference-aware colocation planner (paper §5.1).
+"""Interference-aware colocation scheduling (paper §5.1), online.
 
-Given workload profiles with SLOs, the planner:
-  1. builds the pairwise predicted-slowdown matrix with ONE batched
-     estimator solve (per-kernel granularity -> workload-level
-     aggregation) — O(n^2) estimator work total,
-  2. greedily pairs workloads to maximize packed throughput subject to
-     every member staying within its SLO slowdown; the greedy rounds run
-     over a max-heap of the precomputed pairs with lazy invalidation
-     (each placement just marks its two members used; stale heap entries
-     are discarded on pop), so no pair is ever re-estimated,
-  3. optionally allocates slot partitions (the green-context analogue:
-     disjoint chip/core fractions) when full-device sharing violates an
-     SLO but partitioned sharing does not — trading marginal per-workload
-     performance for colocation opportunity (paper §5.3).
+The public API is the stateful ``ColocationScheduler``: workloads
+``submit()`` and ``remove()`` as they arrive and leave, and ``plan()``
+returns the current SLO-feasible placement set.  The scheduler is
+*incremental* — it keeps the pairwise price matrix (and k-way group
+prices) cached across events, so
 
-The seed implementation re-evaluated every remaining pair from scratch on
-each greedy round — O(n^3) estimator solves. A pair's predicted slowdown
-is independent of which other workloads remain, so the pairwise matrix is
-computed once up front and never changes; the heap replays the exact
-greedy order (gain desc, then first pair in index order) at O(n^2 log n).
+  * an arrival prices only the NEW workload's row — O(n) estimator
+    scenarios, not a full O(n^2) re-price;
+  * a departure never re-prices a pair: its rows are dropped and its
+    group's survivors fall back into the pool with their cached prices
+    (with ``max_group_size > 2`` the replay may price never-seen group
+    combinations — cached from then on; at k=2 a departure solves
+    exactly zero estimator scenarios);
+  * ``plan()`` replays the greedy selection over the cached matrix —
+    pure array/heap work, no estimator solves for already-priced pairs —
+    so an online trace always lands on exactly the placements a cold
+    scheduler over the surviving set would produce.
+
+Placements are **k-way** (``max_group_size``): the greedy rounds still
+seed groups from the best feasible pair (gain desc, index-order
+tie-break — the seed pairing order, bit-for-bit), then grow each group
+one member at a time while the packed gain improves and every member
+stays within its SLO; group candidates are priced by the batched
+multi-kernel solver through the shared `Scenario` currency.
+
+Slot partitioning (the green-context analogue, paper §5.3) is tried for
+SLO-violating PAIRS as before; partitioned pairs are never grown (a
+k-way fraction split is a different search problem — see ROADMAP).
+
+``plan_colocation`` / ``evaluate_pair`` / ``evaluate_pair_partitioned``
+remain as deprecated thin wrappers (a cold scheduler with
+``max_group_size=2`` reproduces their output exactly; pinned by tests).
 """
 from __future__ import annotations
 
 import heapq
+import warnings
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.estimator import solve_batch, workload_slowdown
+from repro.core.estimator import solve_batch, solve_scenarios, workload_slowdown
 from repro.core.profile import KernelProfile, ProfileMatrix, WorkloadProfile
 from repro.core.resources import DeviceModel
+from repro.core.scenario import Scenario
 
 _PARTITION_FRACTIONS = (0.25, 0.5, 0.75)
 _PAIR_BLOCK = 16384          # pairs per batched solve: bounds peak memory
@@ -53,52 +68,104 @@ class Placement:
 
 def _rep_kernel(w: WorkloadProfile, dev: DeviceModel) -> KernelProfile:
     """Time-weighted aggregate kernel used for quick pair screening."""
-    u = w.mixed_utilization(dev)
-    t = w.total_time(dev)
-    return KernelProfile(w.name, demand={
-        r: u[r] * dev.capacity(r) * t for r in u})
+    return w.representative_kernel(dev)
+
+
+def _group_metrics(times: Sequence[float], slows: Sequence[float],
+                   slos: Sequence[float]) -> Tuple[float, bool]:
+    """THE definition of a placement's packed gain (serial time /
+    colocated makespan) and SLO feasibility, for any group size.
+    `evaluate_group` and the scheduler's batched group pricing both call
+    it; `_pair_metrics` below is its vectorized two-member twin for the
+    pairwise hot path — keep the three in lockstep."""
+    serial = sum(times)
+    makespan = max((t * r for t, r in zip(times, slows)), default=0.0)
+    gain = serial / max(makespan, 1e-12)
+    meets = all(r <= s for r, s in zip(slows, slos))
+    return float(gain), bool(meets)
 
 
 def _pair_metrics(ta, tb, ra, rb, slo_a, slo_b):
-    """Workload-level pair aggregation — the ONE definition of packed
-    gain (serial time / colocated makespan) and SLO feasibility, shared
-    by the scalar evaluate_pair path and _PairEvaluator's array path
-    (both call it; tweak it here and both stay in lockstep)."""
+    """Vectorized two-member `_group_metrics` (array-of-pairs form) for
+    _PairEvaluator's hot path — same floor, same comparisons."""
     gain = (ta + tb) / np.maximum(np.maximum(ta * ra, tb * rb), 1e-12)
     meets = (ra <= slo_a) & (rb <= slo_b)
     return gain, meets
 
 
-def evaluate_pair(a: WorkloadProfile, b: WorkloadProfile, dev: DeviceModel,
-                  slot_fraction: Optional[Dict[str, float]] = None
-                  ) -> Placement:
-    ra = workload_slowdown(a, [_rep_kernel(b, dev)], dev, slot_fraction)
-    rb = workload_slowdown(b, [_rep_kernel(a, dev)], dev, slot_fraction)
-    ta, tb = a.total_time(dev), b.total_time(dev)
-    gain, meets = _pair_metrics(ta, tb, ra, rb,
-                                a.slo_slowdown, b.slo_slowdown)
-    return Placement([a.name, b.name], slot_fraction or {},
-                     {a.name: ra, b.name: rb}, bool(meets), float(gain))
+# ------------------------------------------------------------------ #
+#  Group evaluation (k >= 2): the scalar twin of the scheduler's       #
+#  batched group pricing — shared member-slowdown/gain definitions     #
+# ------------------------------------------------------------------ #
+def evaluate_group(workloads: Sequence[WorkloadProfile], dev: DeviceModel,
+                   slot_fraction: Optional[Dict[str, float]] = None
+                   ) -> Placement:
+    """Price one candidate group: every member's workload-level slowdown
+    against the other members' representative kernels, packed gain =
+    serial time / colocated makespan, SLO feasibility of all members.
+    For two members this is exactly the legacy ``evaluate_pair``."""
+    works = list(workloads)
+    reps = {w.name: w.representative_kernel(dev) for w in works}
+    slows: Dict[str, float] = {}
+    for w in works:
+        others = [reps[o.name] for o in works if o is not w]
+        slows[w.name] = workload_slowdown(w, others, dev, slot_fraction)
+    gain, meets = _group_metrics([w.total_time(dev) for w in works],
+                                 [slows[w.name] for w in works],
+                                 [w.slo_slowdown for w in works])
+    return Placement([w.name for w in works], dict(slot_fraction or {}),
+                     {n: float(s) for n, s in slows.items()}, meets, gain)
 
 
-def evaluate_pair_partitioned(a: WorkloadProfile, b: WorkloadProfile,
-                              dev: DeviceModel,
-                              fractions: Sequence[float] = _PARTITION_FRACTIONS
-                              ) -> Placement:
-    """Try full sharing first, then slot partitions (green contexts)."""
-    best = evaluate_pair(a, b, dev)
+def evaluate_group_partitioned(workloads: Sequence[WorkloadProfile],
+                               dev: DeviceModel,
+                               fractions: Sequence[float] = _PARTITION_FRACTIONS
+                               ) -> Placement:
+    """Full sharing first, then slot partitions (green contexts): the
+    first member gets fraction f, the others split the complement."""
+    works = list(workloads)
+    best = evaluate_group(works, dev)
     if best.meets_slo:
         return best
+    rest = max(len(works) - 1, 1)
     for f in fractions:
-        cand = evaluate_pair(a, b, dev, {a.name: f, b.name: 1.0 - f})
+        sf = {works[0].name: f}
+        sf.update({w.name: (1.0 - f) / rest for w in works[1:]})
+        cand = evaluate_group(works, dev, sf)
         if cand.meets_slo and cand.throughput_gain > (best.throughput_gain
                                                       if best.meets_slo else 0):
             best = cand
     return best
 
 
+# ------------------------------------------------------------------ #
+#  Deprecated one-shot API (thin wrappers; see ColocationScheduler)    #
+# ------------------------------------------------------------------ #
+def evaluate_pair(a: WorkloadProfile, b: WorkloadProfile, dev: DeviceModel,
+                  slot_fraction: Optional[Dict[str, float]] = None
+                  ) -> Placement:
+    """Deprecated: use ``evaluate_group([a, b], dev, slot_fraction)``."""
+    warnings.warn("evaluate_pair is deprecated; use evaluate_group",
+                  DeprecationWarning, stacklevel=2)
+    return evaluate_group((a, b), dev, slot_fraction)
+
+
+def evaluate_pair_partitioned(a: WorkloadProfile, b: WorkloadProfile,
+                              dev: DeviceModel,
+                              fractions: Sequence[float] = _PARTITION_FRACTIONS
+                              ) -> Placement:
+    """Deprecated: use ``evaluate_group_partitioned([a, b], dev)``."""
+    warnings.warn("evaluate_pair_partitioned is deprecated; use "
+                  "evaluate_group_partitioned", DeprecationWarning,
+                  stacklevel=2)
+    return evaluate_group_partitioned((a, b), dev, fractions)
+
+
 class _PairEvaluator:
-    """Batched pair evaluation over a fixed workload set.
+    """Batched pair evaluation over a fixed workload set — the dense
+    array fast path of the `Scenario` currency (same victims-first
+    member convention, no per-scenario Python objects on the O(n^2)
+    pricing path).
 
     Compiles every workload kernel + representative background kernel into
     one ProfileMatrix and flat per-kernel arrays, so evaluating a block of
@@ -107,9 +174,11 @@ class _PairEvaluator:
     call prices them all, and workload-level slowdowns aggregate back with
     a segmented sum. No per-pair Python estimator work remains."""
 
-    def __init__(self, works: Sequence[WorkloadProfile], dev: DeviceModel):
+    def __init__(self, works: Sequence[WorkloadProfile], dev: DeviceModel,
+                 reps: Optional[Sequence[KernelProfile]] = None):
         self.works = list(works)
         self.dev = dev
+        self.scenarios_solved = 0
         n = len(self.works)
         profiles: List[KernelProfile] = []
         counts, weights = [], []
@@ -122,8 +191,12 @@ class _PairEvaluator:
         self.offsets = np.concatenate(([0], np.cumsum(self.counts[:-1])))
         self.kernel_weight = np.asarray(weights, np.float64)
         self.rep_rows = np.arange(n, dtype=np.int64) + len(profiles)
-        for w in self.works:
-            profiles.append(_rep_kernel(w, dev))
+        # callers holding memoized representative kernels (the scheduler's
+        # per-workload cache) pass them in; recomputing gives identical
+        # profiles, just redundantly
+        if reps is None:
+            reps = [_rep_kernel(w, dev) for w in self.works]
+        profiles.extend(reps)
         self.pm = ProfileMatrix.from_profiles(profiles)
         self.totals = np.asarray([w.total_time(dev) for w in self.works])
         self.slos = np.asarray([w.slo_slowdown for w in self.works])
@@ -177,6 +250,7 @@ class _PairEvaluator:
             ib, ia, None if frac is None else 1.0 - frac, frac)
         members = np.concatenate([m_a, m_b])
         fractions = None if frac is None else np.concatenate([f_a, f_b])
+        self.scenarios_solved += len(members)
         br = solve_batch(self.pm, members, self.dev, fractions)
         slow = br.slowdowns[:, 0] * np.concatenate([w_a, w_b])
         P = len(ia)
@@ -186,14 +260,6 @@ class _PairEvaluator:
         rb = np.bincount(own_b, slow[na:na + nb], minlength=P) \
             / np.maximum(self.totals[ib], 1e-12)
         return ra, rb
-
-    def placement(self, i: int, j: int, ra: float, rb: float, gain: float,
-                  meets: bool, frac: Optional[float]) -> Placement:
-        a, b = self.works[i], self.works[j]
-        sf = {} if frac is None else {a.name: frac, b.name: 1.0 - frac}
-        return Placement([a.name, b.name], sf,
-                         {a.name: float(ra), b.name: float(rb)},
-                         bool(meets), float(gain))
 
 
 @dataclass
@@ -213,55 +279,264 @@ class Plan:
         return (gains + len(self.solo)) / devices
 
 
+# price tuples: pair -> (slow_lo, slow_hi, gain, meets, frac) ordered by
+# the members' (stable) arrival positions; group -> (gain, meets, slows)
+_PairPrice = Tuple[float, float, float, bool, float]
+_GroupPrice = Tuple[float, bool, Dict[str, float]]
+
+
+class ColocationScheduler:
+    """Online k-way interference-aware colocation scheduler.
+
+    >>> sched = ColocationScheduler(dev, max_group_size=3)
+    >>> sched.submit(decode); sched.submit(prefill)
+    >>> plan = sched.plan()          # prices the new pairs, places
+    >>> sched.remove("decode")       # zero estimator work
+    >>> plan = sched.plan()          # replays greedy over cached prices
+
+    Pricing is lazy: ``submit``/``remove`` are O(1) bookkeeping, and the
+    next ``plan()`` prices exactly the pairs that have never been priced
+    (one batched solve). ``stats["scenarios_solved"]`` counts estimator
+    scenarios, the unit the O(n)-per-arrival guarantee is stated in
+    (tracked by the churn benchmark).
+    """
+
+    def __init__(self, dev: DeviceModel, max_group_size: int = 2,
+                 allow_partition: bool = True):
+        if max_group_size < 2:
+            raise ValueError("max_group_size must be >= 2")
+        self.dev = dev
+        self.max_group_size = int(max_group_size)
+        self.allow_partition = allow_partition
+        self._works: Dict[str, WorkloadProfile] = {}   # insertion-ordered
+        self._uid: Dict[str, int] = {}
+        self._next_uid = 0
+        self._pair: Dict[Tuple[int, int], _PairPrice] = {}
+        self._group: Dict[Tuple[int, ...], _GroupPrice] = {}
+        self._reps: Dict[int, KernelProfile] = {}
+        self.stats: Dict[str, int] = {
+            "scenarios_solved": 0, "pairs_priced": 0, "groups_priced": 0,
+            "arrivals": 0, "departures": 0,
+        }
+
+    # ----------------------------- events ------------------------- #
+    def __len__(self) -> int:
+        return len(self._works)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._works
+
+    @property
+    def workloads(self) -> List[WorkloadProfile]:
+        """Current pool in arrival order."""
+        return list(self._works.values())
+
+    def submit(self, workload: WorkloadProfile) -> None:
+        """Admit (or update) a workload. Re-submitting an existing name
+        replaces its profile but keeps its arrival position (the legacy
+        planner's last-profile-wins dedup); its cached prices are
+        invalidated. O(1) — pricing happens lazily at the next plan()."""
+        old_uid = self._uid.get(workload.name)
+        if old_uid is not None:
+            self._drop_prices(old_uid)
+        self._works[workload.name] = workload
+        self._uid[workload.name] = self._next_uid
+        self._next_uid += 1
+        self.stats["arrivals"] += 1
+
+    def remove(self, name: str) -> None:
+        """Retire a workload. Its pair/group prices are dropped; every
+        other price stays valid (a pair's slowdown is independent of the
+        rest of the pool), so the survivors of its group re-enter the
+        pool with zero pairwise re-pricing (k>2 replays may price fresh
+        group combinations on the next plan)."""
+        if name not in self._works:
+            raise KeyError(f"unknown workload: {name!r}")
+        uid = self._uid.pop(name)
+        del self._works[name]
+        self._drop_prices(uid)
+        self.stats["departures"] += 1
+
+    def _drop_prices(self, uid: int) -> None:
+        self._reps.pop(uid, None)
+        for key in [k for k in self._pair if uid in k]:
+            del self._pair[key]
+        for key in [k for k in self._group if uid in k]:
+            del self._group[key]
+
+    def _rep(self, name: str) -> KernelProfile:
+        uid = self._uid[name]
+        rep = self._reps.get(uid)
+        if rep is None:
+            rep = self._reps[uid] = self._works[name].representative_kernel(
+                self.dev)
+        return rep
+
+    # ----------------------------- pricing ------------------------ #
+    def _price_missing_pairs(self, works: List[WorkloadProfile],
+                             uids: List[int]) -> None:
+        """One batched solve over every never-priced pair (an arrival's
+        new row; the full triangle on a cold start)."""
+        n = len(works)
+        missing = [(i, j) for j in range(n) for i in range(j)
+                   if (uids[i], uids[j]) not in self._pair]
+        if not missing:
+            return
+        ev = _PairEvaluator(works, self.dev,
+                            reps=[self._rep(w.name) for w in works])
+        ia = np.fromiter((i for i, _ in missing), np.int64, len(missing))
+        ib = np.fromiter((j for _, j in missing), np.int64, len(missing))
+        ra, rb, gain, meets = ev.evaluate(ia, ib)       # full-sharing pass
+        frac = np.full(len(ia), np.nan)                 # nan = full sharing
+
+        if self.allow_partition:
+            # green-context fallback for SLO-violating pairs: same
+            # selection rule as evaluate_group_partitioned, batched per
+            # fraction
+            failing = np.flatnonzero(~meets)
+            if failing.size:
+                fia, fib = ia[failing], ib[failing]
+                best_gain = np.zeros(failing.size)   # full share failed -> 0
+                for f in _PARTITION_FRACTIONS:
+                    cra, crb, cgain, cmeets = ev.evaluate(fia, fib, frac=f)
+                    take = cmeets & (cgain > best_gain)
+                    best_gain = np.where(take, cgain, best_gain)
+                    sel = failing[take]
+                    ra[sel], rb[sel] = cra[take], crb[take]
+                    gain[sel], meets[sel] = cgain[take], True
+                    frac[sel] = f
+
+        for p, (i, j) in enumerate(missing):
+            self._pair[(uids[i], uids[j])] = (
+                float(ra[p]), float(rb[p]), float(gain[p]), bool(meets[p]),
+                float(frac[p]))
+        self.stats["scenarios_solved"] += ev.scenarios_solved
+        self.stats["pairs_priced"] += len(missing)
+
+    def _price_groups(self, works: List[WorkloadProfile], uids: List[int],
+                      group: List[int], cands: List[int]
+                      ) -> List[_GroupPrice]:
+        """Price group+{c} for every candidate c in ONE batched solve via
+        the Scenario currency: each member kernel is a victim against the
+        other members' representative kernels (the same probe the
+        pairwise matrix uses, widened to k members)."""
+        missing = [c for c in cands
+                   if tuple(sorted(uids[m] for m in group + [c]))
+                   not in self._group]
+        if missing:
+            scenarios: List[Scenario] = []
+            spans: List[Tuple[int, List[int]]] = []   # (cand, member order)
+            for c in missing:
+                g = group + [c]
+                reps = {m: self._rep(works[m].name) for m in g}
+                for m in g:
+                    bg = tuple(reps[o] for o in g if o != m)
+                    for k in works[m].kernels:
+                        scenarios.append(Scenario((k,), bg, device=self.dev))
+                spans.append((c, g))
+            br = solve_scenarios(scenarios)
+            self.stats["scenarios_solved"] += len(scenarios)
+            self.stats["groups_priced"] += len(missing)
+            row = 0
+            for c, g in spans:
+                slows: Dict[str, float] = {}
+                for m in g:
+                    w = works[m]
+                    tot_iso = tot_col = 0.0
+                    for k in w.kernels:
+                        t = k.isolated_time(self.dev) * k.duration_weight
+                        tot_iso += t
+                        tot_col += t * float(br.slowdowns[row, 0])
+                        row += 1
+                    slows[w.name] = tot_col / max(tot_iso, 1e-12)
+                gain, meets = _group_metrics(
+                    [works[m].total_time(self.dev) for m in g],
+                    [slows[works[m].name] for m in g],
+                    [works[m].slo_slowdown for m in g])
+                self._group[tuple(sorted(uids[m] for m in g))] = (
+                    gain, meets, slows)
+        return [self._group[tuple(sorted(uids[m] for m in group + [c]))]
+                for c in cands]
+
+    # ----------------------------- planning ----------------------- #
+    def plan(self) -> Plan:
+        """Current placements: greedy max-gain SLO-feasible grouping over
+        the cached price matrix (prices any never-seen pairs first)."""
+        works = list(self._works.values())
+        names = [w.name for w in works]
+        n = len(works)
+        if n < 2:
+            return Plan([], sorted(names))
+        uids = [self._uid[nm] for nm in names]
+        self._price_missing_pairs(works, uids)
+
+        iu, ju = np.triu_indices(n, k=1)            # pairs in (i, j) lex order
+        prices = [self._pair[(uids[i], uids[j])] for i, j in zip(iu, ju)]
+        gain = np.fromiter((p[2] for p in prices), np.float64, len(prices))
+        meets = np.fromiter((p[3] for p in prices), bool, len(prices))
+
+        # greedy rounds over the cached matrix: max-heap keyed by
+        # (gain desc, pair index asc) replays the seed's exact pick order;
+        # placements invalidate their members' rows lazily (skip on pop)
+        feas = np.flatnonzero(meets)
+        heap = list(zip(-gain[feas], iu[feas], ju[feas], feas))
+        heapq.heapify(heap)
+        placed = np.zeros(n, bool)
+        placements: List[Placement] = []
+        while heap:
+            neg_gain, i, j, p = heapq.heappop(heap)
+            if placed[i] or placed[j]:
+                continue
+            if -neg_gain <= 1.0:
+                break
+            i, j = int(i), int(j)
+            ra, rb, g, _, f = prices[int(p)]
+            group = [i, j]
+            slows = {names[i]: ra, names[j]: rb}
+            if np.isnan(f):
+                sf: Dict[str, float] = {}
+                if self.max_group_size > 2:
+                    group, slows, g = self._grow(works, uids, placed,
+                                                 group, slows, g)
+            else:
+                sf = {names[i]: f, names[j]: 1.0 - f}
+            placements.append(Placement(
+                [names[m] for m in group], sf,
+                {nm: float(s) for nm, s in slows.items()}, True, float(g)))
+            placed[group] = True
+        solo = sorted(names[i] for i in np.flatnonzero(~placed))
+        return Plan(placements, solo)
+
+    def _grow(self, works, uids, placed, group, slows, gain):
+        """Greedy group growth: add the unplaced workload that most
+        improves the packed gain while keeping every member (old and new)
+        within SLO; stop at max_group_size or when no candidate helps."""
+        while len(group) < self.max_group_size:
+            cands = [c for c in range(len(works))
+                     if not placed[c] and c not in group]
+            if not cands:
+                break
+            priced = self._price_groups(works, uids, group, cands)
+            best = None
+            for c, (cg, cmeets, cslows) in zip(cands, priced):
+                if cmeets and cg > gain and (best is None or cg > best[1]):
+                    best = (c, cg, cslows)
+            if best is None:
+                break
+            group.append(best[0])
+            gain = best[1]
+            slows = best[2]
+        return group, slows, gain
+
+
 def plan_colocation(workloads: Sequence[WorkloadProfile], dev: DeviceModel,
                     allow_partition: bool = True) -> Plan:
-    """Greedy max-gain SLO-feasible pairing, O(n^2) estimator work."""
-    uniq = {w.name: w for w in workloads}        # last-wins, like the seed
-    works = list(uniq.values())
-    names = [w.name for w in works]
-    n = len(works)
-    if n < 2:
-        return Plan([], sorted(names))
-
-    ev = _PairEvaluator(works, dev)
-    iu, ju = np.triu_indices(n, k=1)             # pairs in (i, j) lex order
-    ra, rb, gain, meets = ev.evaluate(iu, ju)    # full-sharing pass
-    frac = np.full(len(iu), np.nan)              # nan = full sharing
-
-    if allow_partition:
-        # green-context fallback for SLO-violating pairs: same selection
-        # rule as evaluate_pair_partitioned, batched per fraction
-        failing = np.flatnonzero(~meets)
-        if failing.size:
-            fia, fib = iu[failing], ju[failing]
-            best_gain = np.zeros(failing.size)   # full share failed -> 0
-            for f in _PARTITION_FRACTIONS:
-                cra, crb, cgain, cmeets = ev.evaluate(fia, fib, frac=f)
-                take = cmeets & (cgain > best_gain)
-                best_gain = np.where(take, cgain, best_gain)
-                sel = failing[take]
-                ra[sel], rb[sel] = cra[take], crb[take]
-                gain[sel], meets[sel] = cgain[take], True
-                frac[sel] = f
-
-    # greedy rounds over the precomputed matrix: max-heap keyed by
-    # (gain desc, pair index asc) replays the seed's exact pick order;
-    # placements invalidate their members' rows lazily (skip on pop)
-    feas = np.flatnonzero(meets)
-    heap = list(zip(-gain[feas], iu[feas], ju[feas], feas))
-    heapq.heapify(heap)
-    placed = np.zeros(n, bool)
-    placements: List[Placement] = []
-    while heap:
-        neg_gain, i, j, p = heapq.heappop(heap)
-        if placed[i] or placed[j]:
-            continue
-        if -neg_gain <= 1.0:
-            break
-        f = frac[p]
-        placements.append(ev.placement(
-            int(i), int(j), ra[p], rb[p], gain[p], True,
-            None if np.isnan(f) else float(f)))
-        placed[i] = placed[j] = True
-    solo = sorted(names[i] for i in np.flatnonzero(~placed))
-    return Plan(placements, solo)
+    """Deprecated one-shot pairing: a cold ``ColocationScheduler`` with
+    ``max_group_size=2`` (identical plans, pinned by tests)."""
+    warnings.warn("plan_colocation is deprecated; use ColocationScheduler "
+                  "(submit/remove/plan)", DeprecationWarning, stacklevel=2)
+    sched = ColocationScheduler(dev, max_group_size=2,
+                                allow_partition=allow_partition)
+    for w in workloads:
+        sched.submit(w)          # dedup: last profile wins, first position
+    return sched.plan()

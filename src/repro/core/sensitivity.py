@@ -20,9 +20,10 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Sequence
 
-from repro.core.estimator import solve_batch
-from repro.core.profile import KernelProfile, ProfileMatrix
+from repro.core.estimator import solve_scenarios
+from repro.core.profile import KernelProfile
 from repro.core.resources import RESOURCE_AXES, DeviceModel
+from repro.core.scenario import Scenario
 
 
 def stressor(axis: str, intensity: float, dev: DeviceModel,
@@ -64,11 +65,10 @@ def sensitivity_batch(kernels: Sequence[KernelProfile], dev: DeviceModel,
     if not kernels:
         return []
     stressors = [stressor(axis, lam, dev) for axis in axes for lam in lambdas]
-    pm = ProfileMatrix.from_profiles(kernels + stressors)
-    members = [[ki, len(kernels) + si]
-               for ki in range(len(kernels))
-               for si in range(len(stressors))]
-    br = solve_batch(pm, members, dev)
+    # one Scenario per (kernel, stressor) grid point — kernels dedup by
+    # identity, so the matrix still has one row per distinct profile
+    br = solve_scenarios([Scenario((k,), (st,)) for k in kernels
+                          for st in stressors], dev)
     slow = br.slowdowns[:, 0].reshape(len(kernels), len(axes), len(lambdas))
     reports = []
     for ki, k in enumerate(kernels):
@@ -98,7 +98,5 @@ def cache_pollution_curve(kernel: KernelProfile, dev: DeviceModel,
     polluters = [KernelProfile("polluter", demand=base_demand,
                                cache_working_set=ws, cache_hit_fraction=1.0)
                  for ws in polluter_ws]
-    pm = ProfileMatrix.from_profiles([kernel] + polluters)
-    members = [[0, 1 + i] for i in range(len(polluters))]
-    br = solve_batch(pm, members, dev)
+    br = solve_scenarios([Scenario((kernel,), (p,)) for p in polluters], dev)
     return [float(s) for s in br.slowdowns[:, 0]]

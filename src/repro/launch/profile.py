@@ -11,7 +11,7 @@ import argparse
 import json
 from pathlib import Path
 
-from repro.core import TPU_V5E, plan_colocation, sensitivity_batch
+from repro.core import TPU_V5E, ColocationScheduler, sensitivity_batch
 from repro.core.profile import WorkloadProfile, from_dryrun_json
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
@@ -33,7 +33,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--plan", action="store_true",
-                    help="run the colocation planner over all phases")
+                    help="run the colocation scheduler over all phases")
+    ap.add_argument("--group-size", type=int, default=2,
+                    help="max workloads per device (k-way placements)")
     args = ap.parse_args(argv)
 
     profs = load_profiles(args.arch)
@@ -48,10 +50,11 @@ def main(argv=None):
         print(f"{p.name:44s} {p.bottleneck(TPU_V5E):11s} {fp}")
 
     if args.plan:
-        works = [WorkloadProfile(p.name, (p,), slo_slowdown=1.3)
-                 for p in profs]
-        plan = plan_colocation(works, TPU_V5E)
-        print("\ncolocation plan (SLO 1.3x):")
+        sched = ColocationScheduler(TPU_V5E, max_group_size=args.group_size)
+        for p in profs:
+            sched.submit(WorkloadProfile(p.name, (p,), slo_slowdown=1.3))
+        plan = sched.plan()
+        print(f"\ncolocation plan (SLO 1.3x, k<={args.group_size}):")
         for pl in plan.placements:
             print("  ", pl)
         print("   solo:", plan.solo)

@@ -129,7 +129,10 @@ def _param_rule(path: str, cfg: ModelConfig, recipe: str, mesh: Mesh,
     r = rule()
     if r is None:
         return P()
-    r = tuple(r)
+    # canonicalize 1-axis tuples (('data',) -> 'data'): same GSPMD
+    # sharding, but comparable against hand-written specs
+    r = tuple(ax[0] if isinstance(ax, tuple) and len(ax) == 1 else ax
+              for ax in r)
     assert len(r) <= ndim, f"{path}: rule {r} longer than ndim {ndim}"
     return P(*((None,) * (ndim - len(r)) + r))
 

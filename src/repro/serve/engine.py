@@ -23,8 +23,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import TPU_V5E, DeviceModel, ProfileMatrix
-from repro.core.resources import AXIS_INDEX, RESOURCE_AXES
+from repro.core import (TPU_V5E, DeviceModel, KernelProfile, Scenario,
+                        solve_scenarios)
+from repro.core.resources import RESOURCE_AXES
 from repro.models import LOCAL_CTX, ParallelContext, build_model
 from repro.models import transformer as tfm
 from repro.models.layers import rmsnorm, unembed, embed
@@ -108,27 +109,24 @@ class Engine:
         return seq.seq_id
 
     # --------------------- interference model --------------------- #
-    def _phase_matrix(self, names, n_tokens) -> ProfileMatrix:
-        """Analytic per-call resource vectors, one row per token count:
-        weight reads dominate decode; matmul FLOPs dominate prefill
-        chunks. Dense form so every chunk candidate prices in one pass."""
-        n_tokens = np.asarray(n_tokens, np.float64)
+    def _phase_profile(self, name: str, n_tokens: float) -> KernelProfile:
+        """Analytic per-call resource vector for one engine phase: weight
+        reads dominate decode; matmul FLOPs dominate prefill chunks."""
         n_active = self.cfg.n_active_params()
         flops = 2.0 * n_active * n_tokens
         bytes_ = 2.0 * n_active + 2e5 * n_tokens   # weights + kv traffic
-        demand = np.zeros((len(names), len(RESOURCE_AXES)))
-        demand[:, AXIS_INDEX["mxu"]] = flops
-        demand[:, AXIS_INDEX["vpu"]] = flops / 50
-        demand[:, AXIS_INDEX["issue"]] = flops / 256
-        demand[:, AXIS_INDEX["hbm"]] = bytes_
-        demand[:, AXIS_INDEX["l2"]] = bytes_
-        return ProfileMatrix.from_arrays(names, demand)
+        demand = {r: 0.0 for r in RESOURCE_AXES}
+        demand.update(mxu=flops, vpu=flops / 50, issue=flops / 256,
+                      hbm=bytes_, l2=bytes_)
+        return KernelProfile(name, demand=demand)
 
     def _pick_chunk(self, seq: Sequence, n_active_decodes: int) -> int:
         """Largest chunk whose colocation keeps predicted decode TBT within
-        the SLO (paper §5.1 estimator-in-the-loop). All halving candidates
-        are priced in ONE batched ProfileMatrix solve instead of a
-        re-profile per halving step."""
+        the SLO (paper §5.1 estimator-in-the-loop). Every halving candidate
+        is one `Scenario` (victim = the decode batch, background = the
+        chunk), priced in a single batched solve: predicted TBT = the
+        decode step inflated by the chunk's interference, plus the chunk
+        itself serialized on the core it is interleaved with."""
         remaining = seq.prompt_len - seq.pos
         if self.ecfg.mode == "serial":
             return remaining
@@ -143,15 +141,14 @@ class Engine:
             chunk //= 2
         if not cands:
             return max(chunk, 16)
-        pm = self._phase_matrix(
-            ["decode"] + [f"prefill{c}" for c in cands],
-            [max(n_active_decodes, 1)] + cands)
-        ts = pm.isolated_time(self.dev)
-        tbt_iso = ts[0]
-        # serialized-on-one-core model: chunk time adds to the TBT of the
-        # decode step it is interleaved with
-        ok = tbt_iso + ts[1:] <= max(self.ecfg.tbt_slo_ms / 1e3,
-                                     tbt_iso * 1.5)
+        decode = self._phase_profile("decode", max(n_active_decodes, 1))
+        chunks = [self._phase_profile(f"prefill{c}", c) for c in cands]
+        br = solve_scenarios([Scenario((decode,), (ch,)) for ch in chunks],
+                             self.dev)
+        tbt_iso = decode.isolated_time(self.dev)
+        t_chunk = np.asarray([ch.isolated_time(self.dev) for ch in chunks])
+        tbt_pred = tbt_iso * br.slowdowns[:, 0] + t_chunk
+        ok = tbt_pred <= max(self.ecfg.tbt_slo_ms / 1e3, tbt_iso * 1.5)
         passing = np.flatnonzero(ok)
         if passing.size:
             return cands[passing[0]]

@@ -1,0 +1,219 @@
+"""Online ColocationScheduler: incremental == cold, k=2 == legacy pairing
+(and the seed planner), k=3 oracle vs direct estimate() calls, O(n)
+arrival pricing, and the deprecation shims forwarding identically."""
+import sys
+import warnings
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "benchmarks"))
+import _seed_reference as seed  # noqa: E402
+from bench_planner import assert_plans_equal, random_workloads  # noqa: E402
+
+from repro.core import (TPU_V5E, ColocationScheduler, KernelProfile,  # noqa: E402
+                        WorkloadProfile, estimate, evaluate_group,
+                        evaluate_group_partitioned, evaluate_pair,
+                        evaluate_pair_partitioned, plan_colocation)
+from repro.core.resources import RESOURCE_AXES  # noqa: E402
+
+TOL = 1e-9
+
+
+def cold(works, dev=TPU_V5E, k=2, allow_partition=True):
+    s = ColocationScheduler(dev, max_group_size=k,
+                            allow_partition=allow_partition)
+    for w in works:
+        s.submit(w)
+    return s
+
+
+# ------------------------------------------------------------------ #
+#  k=2 reproduces the one-shot pairing exactly                        #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("allow_partition", [True, False])
+def test_k2_cold_scheduler_matches_seed_planner(allow_partition):
+    rng = np.random.default_rng(3)
+    works = random_workloads(rng, 12, TPU_V5E)
+    got = cold(works, allow_partition=allow_partition).plan()
+    want = seed.plan_colocation(works, TPU_V5E, allow_partition)
+    assert_plans_equal(got, want)
+
+
+def test_plan_colocation_shim_warns_and_forwards():
+    rng = np.random.default_rng(4)
+    works = random_workloads(rng, 10, TPU_V5E)
+    with pytest.warns(DeprecationWarning, match="plan_colocation"):
+        got = plan_colocation(works, TPU_V5E)
+    assert_plans_equal(got, cold(works).plan())
+
+
+def test_evaluate_pair_shims_warn_and_forward():
+    rng = np.random.default_rng(5)
+    a, b = random_workloads(rng, 2, TPU_V5E)
+    with pytest.warns(DeprecationWarning, match="evaluate_pair"):
+        got = evaluate_pair(a, b, TPU_V5E)
+    want = evaluate_group((a, b), TPU_V5E)
+    sref = seed.evaluate_pair(a, b, TPU_V5E)
+    for other in (want, sref):
+        assert got.workloads == other.workloads
+        assert got.meets_slo == other.meets_slo
+        assert got.throughput_gain == pytest.approx(other.throughput_gain,
+                                                    rel=TOL, abs=TOL)
+        for n in other.predicted_slowdown:
+            assert got.predicted_slowdown[n] == pytest.approx(
+                other.predicted_slowdown[n], rel=TOL, abs=TOL)
+
+    with pytest.warns(DeprecationWarning, match="evaluate_pair_partitioned"):
+        gp = evaluate_pair_partitioned(a, b, TPU_V5E)
+    wp = evaluate_group_partitioned((a, b), TPU_V5E)
+    sp = seed.evaluate_pair_partitioned(a, b, TPU_V5E)
+    for other in (wp, sp):
+        assert gp.slot_fraction == other.slot_fraction
+        assert gp.throughput_gain == pytest.approx(other.throughput_gain,
+                                                   rel=TOL, abs=TOL)
+
+
+# ------------------------------------------------------------------ #
+#  Incremental replanning == cold plan on the surviving set           #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("k", [2, 3])
+def test_incremental_trace_matches_cold(k):
+    rng = np.random.default_rng(11)
+    pool = random_workloads(rng, 40, TPU_V5E)
+    sched = ColocationScheduler(TPU_V5E, max_group_size=k)
+    resident = []
+    fresh = list(pool)
+    for event in range(24):
+        if resident and rng.random() < 0.4:
+            victim = resident.pop(int(rng.integers(len(resident))))
+            sched.remove(victim.name)
+        else:
+            w = fresh.pop()
+            resident.append(w)
+            sched.submit(w)
+        got = sched.plan()
+        want = cold(resident, k=k).plan()
+        assert_plans_equal(got, want)
+
+
+def test_arrival_prices_one_row_departure_prices_nothing():
+    rng = np.random.default_rng(12)
+    works = random_workloads(rng, 24, TPU_V5E)
+    sched = cold(works[:-1])
+    sched.plan()
+    cold_scen = sched.stats["scenarios_solved"]
+    n = len(works) - 1
+
+    sched.submit(works[-1])
+    sched.plan()
+    arrival_scen = sched.stats["scenarios_solved"] - cold_scen
+    # the new row: per pair, the arrival's kernels probe the resident's
+    # rep and vice versa (+ partition retries for SLO-failing pairs) —
+    # linear in n, far below the O(n^2) cold price
+    assert 0 < arrival_scen <= 16 * (n + 1)
+    assert arrival_scen < cold_scen / 4
+
+    before = sched.stats["scenarios_solved"]
+    sched.remove(works[0].name)
+    sched.plan()
+    assert sched.stats["scenarios_solved"] == before
+
+
+def test_departure_releases_group_survivors():
+    mk = lambda name: WorkloadProfile(
+        name, (KernelProfile(name + ":k", demand={
+            **{r: 0.0 for r in RESOURCE_AXES},
+            "hbm": 0.3 * TPU_V5E.capacity("hbm")}, duration=1.0),),
+        slo_slowdown=2.0)
+    works = [mk(f"w{i}") for i in range(4)]
+    sched = cold(works)
+    plan = sched.plan()
+    assert len(plan.placements) == 2
+    partner = next(p for p in plan.placements if "w0" in p.workloads)
+    survivor = next(n for n in partner.workloads if n != "w0")
+    sched.remove("w0")
+    replan = sched.plan()
+    placed = {n for p in replan.placements for n in p.workloads}
+    # the widowed survivor is back in the pool: re-paired or solo
+    assert survivor in placed | set(replan.solo)
+    assert "w0" not in placed | set(replan.solo)
+
+
+def test_resubmit_updates_profile_in_place():
+    rng = np.random.default_rng(13)
+    works = random_workloads(rng, 8, TPU_V5E)
+    sched = cold(works)
+    sched.plan()
+    # re-submit w3 with a different profile: the plan must equal a cold
+    # plan over the updated pool in the original arrival order
+    updated = random_workloads(np.random.default_rng(99), 8, TPU_V5E)[3]
+    updated = WorkloadProfile(works[3].name, updated.kernels,
+                              updated.slo_slowdown)
+    sched.submit(updated)
+    new_pool = [updated if w.name == updated.name else w for w in works]
+    assert_plans_equal(sched.plan(), cold(new_pool).plan())
+
+
+# ------------------------------------------------------------------ #
+#  k-way placements                                                   #
+# ------------------------------------------------------------------ #
+def _decode_like(name, hbm=0.28, slo=2.0):
+    d = {r: 0.0 for r in RESOURCE_AXES}
+    d["hbm"] = hbm * TPU_V5E.capacity("hbm")
+    d["issue"] = 0.05 * TPU_V5E.capacity("issue")
+    return WorkloadProfile(name, (KernelProfile(name + ":k", demand=d,
+                                                duration=1.0),),
+                           slo_slowdown=slo)
+
+
+def test_k3_oracle_against_direct_estimate():
+    """A 3-way group's numbers must equal first-principles estimate()
+    calls: each member's kernel vs the other members' rep kernels."""
+    works = [_decode_like(f"dec{i}") for i in range(3)]
+    plan = cold(works, k=3).plan()
+    assert len(plan.placements) == 1
+    pl = plan.placements[0]
+    assert sorted(pl.workloads) == [w.name for w in works]
+
+    reps = {w.name: w.representative_kernel(TPU_V5E) for w in works}
+    times = {w.name: w.total_time(TPU_V5E) for w in works}
+    expected = {}
+    for w in works:
+        others = [reps[o.name] for o in works if o.name != w.name]
+        r = estimate([w.kernels[0]] + others, TPU_V5E)
+        expected[w.name] = r.slowdowns[w.kernels[0].name]
+    for n, want in expected.items():
+        assert pl.predicted_slowdown[n] == pytest.approx(want, rel=TOL,
+                                                         abs=TOL)
+    want_gain = sum(times.values()) / max(times[n] * expected[n]
+                                          for n in expected)
+    assert pl.throughput_gain == pytest.approx(want_gain, rel=TOL, abs=TOL)
+    # group pricing == the scalar evaluate_group twin
+    oracle = evaluate_group(works, TPU_V5E)
+    assert pl.throughput_gain == pytest.approx(oracle.throughput_gain,
+                                               rel=TOL, abs=TOL)
+
+
+def test_k3_beats_k2_on_decode_heavy_mix():
+    mix = [_decode_like(f"dec{i}") for i in range(6)]
+    gain2 = cold(mix, k=2).plan().total_gain
+    gain3 = cold(mix, k=3).plan().total_gain
+    assert gain3 > gain2 > 1.0
+
+
+def test_k3_respects_slo():
+    """Growth must stop before any member would violate its SLO."""
+    mix = [_decode_like(f"dec{i}", hbm=0.45, slo=1.25) for i in range(4)]
+    plan = cold(mix, k=4).plan()
+    for pl in plan.placements:
+        assert pl.meets_slo
+        assert max(pl.predicted_slowdown.values()) <= 1.25 + TOL
+
+
+def test_max_group_size_validation():
+    with pytest.raises(ValueError, match="max_group_size"):
+        ColocationScheduler(TPU_V5E, max_group_size=1)
+    with pytest.raises(KeyError):
+        ColocationScheduler(TPU_V5E).remove("ghost")
