@@ -8,7 +8,14 @@ Measures
      1024} workloads (target: >= 20x vs the seed O(n^3) planner at n=256);
   3. online churn: with n resident workloads, arrive/leave events must
      replan with O(n) estimator scenarios each (the cached price matrix
-     makes re-planning a row update, not an O(n^2) re-price).
+     makes re-planning a row update, not an O(n^2) re-price);
+  4. the partition-search gate: on the SLO-tight decode-heavy mix the
+     k-way slot-fraction search must strictly beat the legacy fixed-grid
+     pair planner in total gain via partitioned groups of size > 2.
+
+`--quick` (the CI smoke) also writes BENCH_planner.json — plan latency,
+scenarios/arrival, and the partition-search gate in machine-readable
+form, uploaded as a CI artifact.
 
 Outputs are cross-checked against the seed at <= 1e-9 (slowdowns,
 speeds, plus placement-for-placement Plan equality) wherever the seed is
@@ -22,6 +29,7 @@ marked "est".
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 from pathlib import Path
@@ -32,17 +40,21 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np
 
 import _seed_reference as seed
-from repro.core import (TPU_V5E, ColocationScheduler, KernelProfile,
-                        WorkloadProfile, estimate, estimate_batch)
+from repro.core import (LEGACY_SEARCH, TPU_V5E, ColocationScheduler,
+                        KernelProfile, WorkloadProfile, estimate,
+                        estimate_batch)
 from repro.core.resources import RESOURCE_AXES
 
 TOL = 1e-9
 
 
-def cold_plan(works, dev, max_group_size=2):
+def cold_plan(works, dev, max_group_size=2, search=None):
     """One-shot plan through the online API (what `plan_colocation`
-    forwards to, minus the DeprecationWarning)."""
-    sched = ColocationScheduler(dev, max_group_size=max_group_size)
+    forwards to, minus the DeprecationWarning).  `search=LEGACY_SEARCH`
+    reproduces the seed's fixed-grid pair behavior bit-for-bit; the
+    default is the full k-way fraction search."""
+    sched = ColocationScheduler(dev, max_group_size=max_group_size,
+                                fraction_search=search)
     for w in works:
         sched.submit(w)
     return sched.plan()
@@ -86,6 +98,31 @@ def random_workloads(rng, n, dev):
               for j in range(int(rng.integers(1, 3)))),
         slo_slowdown=float(rng.uniform(1.1, 1.6)))
         for i in range(n)]
+
+
+def decode_heavy_mix(dev, n_decode=4, n_aux=2):
+    """The SLO-tight decode-heavy mix of the partition-search gate
+    (tests/test_fracsearch.py imports it — single source of truth).
+
+    Decode instances are bandwidth-bound (hbm/l2 0.6) with light compute
+    and a tight 1.15x SLO: two of them over-commit the device-wide
+    bandwidth axes at full share, but slot-partitioning (0.5, 0.5)
+    throttles each other's representative to its slice and rescues the
+    pair.  The aux jobs are short best-effort VPU bursts (distillation /
+    eval-style) whose partitioned representative freezes on an axis the
+    decodes never contend on, so a k-way fraction search can pack
+    decode+decode+aux per device — the fixed-grid pair planner cannot."""
+    def prof(name, slo, dur, **u):
+        d = {r: u.get(r, 0.0) * dev.capacity(r) for r in RESOURCE_AXES}
+        return WorkloadProfile(
+            name, (KernelProfile(f"{name}#step", demand=d, duration=dur),),
+            slo_slowdown=slo)
+
+    decodes = [prof(f"decode{i}", 1.15, 1.0, mxu=0.4, vpu=0.1, issue=0.1,
+                    smem=0.05, hbm=0.6, l2=0.6) for i in range(n_decode)]
+    aux = [prof(f"aux{i}", 12.0, 0.08, vpu=0.072, issue=0.004, mxu=0.004,
+                hbm=0.0016, l2=0.0016) for i in range(n_aux)]
+    return decodes + aux
 
 
 # ------------------------------------------------------------------ #
@@ -160,22 +197,28 @@ def bench_planner(ns, seed_cap: int, dev) -> dict:
     print(f"  {'n':>5} {'pairs':>8} {'new (s)':>9} {'seed (s)':>10} "
           f"{'speedup':>9}  plan")
     speedups = {}
+    latency = {}
     per_pair_cost = None
     for n in ns:
         rng = np.random.default_rng(42)
         works = random_workloads(rng, n, dev)
         pairs = n * (n - 1) // 2
 
+        # headline timing: the DEFAULT config (full fraction search)
         t0 = time.perf_counter()
         plan = cold_plan(works, dev)
         t_new = time.perf_counter() - t0
+        latency[n] = t_new
         rounds = len(plan.placements) + 1
 
         if n <= seed_cap:
             t0 = time.perf_counter()
             seed_plan = seed.plan_colocation(works, dev)
             t_seed = time.perf_counter() - t0
-            assert_plans_equal(plan, seed_plan)
+            # equivalence oracle: the LEGACY fixed-grid config must
+            # reproduce the seed planner placement-for-placement
+            assert_plans_equal(cold_plan(works, dev, search=LEGACY_SEARCH),
+                               seed_plan)
             # greedy rounds each rescan ~all pairs: amortized per-pair cost
             per_pair_cost = t_seed / (rounds * pairs)
             tag = ""
@@ -189,7 +232,7 @@ def bench_planner(ns, seed_cap: int, dev) -> dict:
               f"{t_seed / t_new:>8.0f}x  "
               f"{len(plan.placements)} pairs, {len(plan.solo)} solo, "
               f"gain {plan.total_gain:.2f}")
-    return speedups
+    return {"speedups": speedups, "latency_s": latency}
 
 
 def bench_churn(n: int, events: int, dev, max_group_size: int = 2) -> dict:
@@ -255,7 +298,9 @@ def bench_churn(n: int, events: int, dev, max_group_size: int = 2) -> dict:
           f"than a cold re-price)")
     print(f"  departure event    {np.mean(dep_t):8.3f}s  "
           f"({np.mean(dep_scen):.0f} scenarios)")
-    o_n = scen_per_arrival <= 16 * (m + 1)     # O(n) scenarios, small const
+    # O(n) scenarios with a constant covering the fraction search's
+    # coarse grid + refinement on every SLO-failing pair of the new row
+    o_n = scen_per_arrival <= 40 * (m + 1)
     print(f"  arrival estimator work O(n): "
           f"{'PASS' if o_n else 'FAIL'} "
           f"({scen_per_arrival:.0f} scenarios vs n={m})")
@@ -263,10 +308,57 @@ def bench_churn(n: int, events: int, dev, max_group_size: int = 2) -> dict:
             "cold_scen": cold_scen}
 
 
+def bench_partition_search(dev) -> dict:
+    """The k-way slot-fraction search gate: on the SLO-tight decode-heavy
+    mix, the k=3 scheduler with the default search must strictly beat the
+    legacy fixed-grid pair planner in total gain, via partitioned groups
+    of size > 2 (every member within SLO)."""
+    mix = decode_heavy_mix(dev)
+
+    t0 = time.perf_counter()
+    baseline = cold_plan(mix, dev, max_group_size=2, search=LEGACY_SEARCH)
+    t_base = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    kway = cold_plan(mix, dev, max_group_size=3)
+    t_kway = time.perf_counter() - t0
+
+    grown = [p for p in kway.placements
+             if len(p.workloads) > 2 and p.slot_fraction]
+    ok = (kway.total_gain > baseline.total_gain + 1e-6 and bool(grown)
+          and all(p.meets_slo for p in kway.placements))
+    print(f"\n== partition search: SLO-tight decode-heavy mix "
+          f"({len(mix)} workloads) on {dev.name} ==")
+    print(f"  fixed-grid pairs   gain {baseline.total_gain:8.3f}  "
+          f"({len(baseline.placements)} placements, "
+          f"{len(baseline.solo)} solo, {t_base:.3f}s)")
+    print(f"  k-way + search     gain {kway.total_gain:8.3f}  "
+          f"({len(kway.placements)} placements, "
+          f"{len(kway.solo)} solo, {t_kway:.3f}s)")
+    for p in kway.placements:
+        fr = {n: round(f, 4) for n, f in p.slot_fraction.items()}
+        print(f"    {'+'.join(p.workloads):32s} fractions {fr or 'full'}")
+    print(f"  partitioned k-way groups beat fixed-grid pairs: "
+          f"{'PASS' if ok else 'FAIL'}")
+    return {
+        "baseline_gain": baseline.total_gain,
+        "kway_gain": kway.total_gain,
+        "kway_groups": [
+            {"workloads": p.workloads, "fractions": p.slot_fraction,
+             "gain": p.throughput_gain} for p in kway.placements],
+        "pass": ok,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
-                    help="CI smoke: small n, fewer scenarios")
+                    help="CI smoke: small n, fewer scenarios; writes "
+                         "BENCH_planner.json unless --json overrides it")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write a machine-readable result summary to this "
+                         "path (plan latency, scenarios/arrival, partition-"
+                         "search gate; implied as BENCH_planner.json by "
+                         "--quick)")
     ap.add_argument("--n", type=int, nargs="*", default=None,
                     help="workload counts to plan (default 16 64 256 1024)")
     ap.add_argument("--scenarios", type=int, default=None,
@@ -290,8 +382,10 @@ def main(argv=None):
         seed_cap = args.seed_cap if args.seed_cap is not None else 256
 
     batch_speedup = bench_estimator(n_scen, TPU_V5E)
-    plan_speedups = bench_planner(ns, seed_cap, TPU_V5E)
+    planner = bench_planner(ns, seed_cap, TPU_V5E)
+    plan_speedups = planner["speedups"]
     churn = bench_churn(args.churn_n, args.churn_events, TPU_V5E)
+    partition = bench_partition_search(TPU_V5E)
 
     print("\n== acceptance ==")
     ok_batch = batch_speedup >= 10
@@ -314,7 +408,33 @@ def main(argv=None):
           f"{'PASS' if ok_churn else 'FAIL'} "
           f"({churn['scen_per_arrival']:.0f} per arrival vs "
           f"{churn['cold_scen']} cold)")
-    return 0 if (ok_batch and ok_plan and ok_churn) else 1
+    ok_part = partition["pass"]
+    print(f"  partitioned k-way groups > fixed-grid pairs: "
+          f"{'PASS' if ok_part else 'FAIL'} "
+          f"({partition['kway_gain']:.3f} vs "
+          f"{partition['baseline_gain']:.3f})")
+
+    ok = ok_batch and ok_plan and ok_churn and ok_part
+    json_path = args.json or ("BENCH_planner.json" if args.quick else None)
+    if json_path:
+        payload = {
+            "estimator_batch_speedup": batch_speedup,
+            "plan_latency_s": {str(n): t
+                               for n, t in planner["latency_s"].items()},
+            "plan_speedup_vs_seed": {str(n): (None if not np.isfinite(s)
+                                              else s)
+                                     for n, s in plan_speedups.items()},
+            "churn": {"scenarios_per_arrival": churn["scen_per_arrival"],
+                      "cold_scenarios": churn["cold_scen"],
+                      "o_n_pass": bool(churn["o_n"])},
+            "partition_search": partition,
+            "acceptance": {"batch": ok_batch, "plan": ok_plan,
+                           "churn": ok_churn, "partition": ok_part,
+                           "all": ok},
+        }
+        Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"\n  wrote {json_path}")
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -1,16 +1,19 @@
-"""Quickstart: the paper's methodology in 60 lines.
+"""Quickstart: the paper's methodology in 80 lines.
 
 1. Build resource profiles for two workload phases (an MXU-bound prefill
    and an HBM-bound decode) on the TPU v5e resource model.
 2. Quantify each phase's interference sensitivity (the paper's §4 sweep).
 3. Run the ONLINE colocation scheduler: workloads arrive and leave, and
    `plan()` incrementally re-places them (k-way groups, SLO-guarded).
+4. Rescue an SLO-violating decode fleet with the k-way slot-fraction
+   search (paper §5.3 green contexts): partitioned groups of three share
+   each device, at fractions the search finds.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 from repro.core import (TPU_V5E, ColocationScheduler, KernelProfile,
-                        Scenario, WorkloadProfile, sensitivity_batch,
-                        solve_scenarios)
+                        Scenario, WorkloadProfile, partition_curve,
+                        sensitivity_batch, solve_scenarios)
 from repro.core.resources import RESOURCE_AXES
 
 
@@ -61,6 +64,40 @@ def main():
     print("    run solo:", plan.solo)
     print(f"  estimator scenarios solved so far: "
           f"{sched.stats['scenarios_solved']}")
+
+    print("\n== k-way slot-fraction search (green contexts, §5.3) ==")
+    # a decode fleet too bandwidth-hungry to share a device at full
+    # rate, plus short best-effort compute bursts riding along
+    def workload(name, slo, dur, **utils):
+        d = {r: 0.0 for r in RESOURCE_AXES}
+        for axis, frac in utils.items():
+            d[axis] = frac * TPU_V5E.capacity(axis)
+        return WorkloadProfile(name, (KernelProfile(
+            name + "#step", demand=d, duration=dur),), slo_slowdown=slo)
+
+    fleet = [workload(f"decode_{i}", 1.15, 1.0, mxu=0.4, vpu=0.1,
+                      issue=0.1, smem=0.05, hbm=0.6, l2=0.6)
+             for i in range(4)]
+    fleet += [workload(f"distill_{i}", 12.0, 0.08, vpu=0.072, issue=0.004,
+                       mxu=0.004, hbm=0.0016, l2=0.0016) for i in range(2)]
+    sched = ColocationScheduler(TPU_V5E, max_group_size=3)
+    for w in fleet:
+        sched.submit(w)
+    plan = sched.plan()
+    for pl in plan.placements:
+        fr = {n: round(f, 3) for n, f in pl.slot_fraction.items()}
+        print(f"  colocate {' + '.join(pl.workloads)}  "
+              f"slot fractions {fr or 'full sharing'}  "
+              f"gain {pl.throughput_gain:.2f}")
+    print("  run solo:", plan.solo or "nothing")
+
+    # the §5.3 diagnostic: how each member's slowdown responds as one
+    # member's slot share sweeps (the ray the legacy fixed grid explored)
+    curves = partition_curve(fleet[:2] + fleet[4:5], TPU_V5E, member=2,
+                             fractions=(0.125, 0.25, 0.5))
+    print("  partition response (distill_0 share 12.5% -> 50%):")
+    for name, slows in curves.items():
+        print(f"    {name:10s}", " ".join(f"{s:6.2f}x" for s in slows))
 
 
 if __name__ == "__main__":

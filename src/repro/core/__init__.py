@@ -3,13 +3,18 @@ quantification and colocation scheduling. See DESIGN.md §1-2."""
 from repro.core.resources import DEVICES, H100, RTX3090, TPU_V5E, DeviceModel  # noqa: F401
 from repro.core.profile import KernelProfile, ProfileMatrix, WorkloadProfile  # noqa: F401
 from repro.core.scenario import (CompiledScenarios, Scenario,  # noqa: F401
-                                 compile_scenarios)
-from repro.core.estimator import (BatchResult, ColocationResult,  # noqa: F401
-                                  colocation_speedup, estimate,
-                                  estimate_batch, pairwise_slowdown,
-                                  solve_scenarios, workload_slowdown)
+                                 compile_scenarios, group_victim_scenarios)
+from repro.core.estimator import (FRACTION_FLOOR, BatchResult,  # noqa: F401
+                                  ColocationResult, colocation_speedup,
+                                  estimate, estimate_batch,
+                                  pairwise_slowdown, solve_scenarios,
+                                  workload_slowdown)
+from repro.core.fracsearch import (LEGACY_SEARCH, FractionSearchConfig,  # noqa: F401
+                                   GroupFractions, search_group_fractions,
+                                   simplex_candidates)
 from repro.core.sensitivity import (SensitivityReport, cache_pollution_curve,  # noqa: F401
-                                    sensitivity, sensitivity_batch, stressor)
+                                    partition_curve, sensitivity,
+                                    sensitivity_batch, stressor)
 from repro.core.scheduler import (ColocationScheduler, Plan, Placement,  # noqa: F401
                                   evaluate_group, evaluate_group_partitioned,
                                   evaluate_pair, evaluate_pair_partitioned,

@@ -23,7 +23,10 @@ This generalizes all the paper's findings in one mechanism:
 Capacity scaling: `slot_fraction` models SM partitioning (green contexts /
 CUDA_MPS_ACTIVE_THREAD_PERCENTAGE): per-slot axes (mxu/vpu/issue/smem)
 scale with the slot share; device-wide axes (hbm/l2/ici) do NOT — exactly
-the distinction the paper draws in §4.3.
+the distinction the paper draws in §4.3.  A fraction at or below
+`FRACTION_FLOOR` excludes the member entirely (no demand, no slots,
+slowdown +inf), and slot feasibility scales each member's slot need by
+its fraction.
 
 Batch execution: the solver is written over dense (scenarios x kernels x
 axes) NumPy arrays, so `estimate_batch` solves thousands of colocation
@@ -46,6 +49,17 @@ from repro.core.scenario import Scenario, compile_scenarios, scenario_device
 
 PER_SLOT_AXES = ("mxu", "vpu", "issue", "smem")
 DEVICE_AXES = ("hbm", "l2", "ici")
+
+# f -> 0 semantics: a slot fraction at or below this floor means the
+# member is ABSENT (a green context with no slots): it contributes no
+# demand, occupies no slots, and its own slowdown is +inf — it makes no
+# progress.  Live members keep the documented capacity-scaling behavior;
+# the matching 1e-6 clamp inside the solver merely keeps the vectorized
+# division defined and can never bite a live member.  (Before this floor
+# was defined, a fraction of exactly 0 got ~1e6x inflated demand instead
+# of being treated as absent — the k-way fraction search relies on the
+# exclusion semantics.)
+FRACTION_FLOOR = 1e-6
 
 _N_AXES = len(RESOURCE_AXES)
 _PER_SLOT_IDX = np.array([AXIS_INDEX[r] for r in PER_SLOT_AXES])
@@ -155,6 +169,17 @@ def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
         names = [[pm.names[i] for i in m] for m in members]
     _, mask, frac, demand, duration, ws, hit, slots = _gather(
         pm, members, fractions)
+    # members at or below the exclusion floor are absent (see
+    # FRACTION_FLOOR): zero their inputs so they neither contend nor
+    # occupy slots; their own slowdown is patched to +inf at the end
+    excluded = mask & (frac <= FRACTION_FLOOR)
+    present = mask & ~excluded
+    if excluded.any():
+        demand = np.where(present[:, :, None], demand, 0.0)
+        duration = np.where(present, duration, 0.0)
+        ws = np.where(present, ws, 0.0)
+        hit = np.where(present, hit, 0.0)
+        slots = np.where(present, slots, 0.0)
     S, K = mask.shape
     if K == 0:                    # every scenario empty: nothing contends
         z = np.zeros((S, 0))
@@ -169,7 +194,7 @@ def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
     cache_cap = dev.cache_capacity
     total_ws = ws.sum(1)
     resident_col = np.where(total_ws > cache_cap, 0.0, 1.0)
-    nk = mask.sum(1)
+    nk = present.sum(1)
     has_ws = ws > 0
     share = np.where(
         has_ws & (nk[:, None] > 1), resident_col[:, None],
@@ -183,8 +208,10 @@ def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
     t_iso = isolated_time_arrays(eff_iso, duration, cap_vec)
     u = utilization_arrays(eff_col, t_col, cap_vec)
     # restricting a kernel to a slot fraction: per-slot axes capacity
-    # seen by that kernel shrinks -> its relative demand grows
-    slot_scale = np.where(frac < 1.0, np.maximum(frac, 1e-6), 1.0)
+    # seen by that kernel shrinks -> its relative demand grows.  Live
+    # fractions are > FRACTION_FLOOR (smaller ones were excluded above),
+    # so the clamp only keeps the division defined for excluded rows.
+    slot_scale = np.where(frac < 1.0, np.maximum(frac, FRACTION_FLOOR), 1.0)
     u[:, :, _PER_SLOT_IDX] = u[:, :, _PER_SLOT_IDX] / slot_scale[:, :, None]
 
     axis_load = u.sum(1)
@@ -195,7 +222,7 @@ def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
     # All scenarios advance one freeze-round per iteration; finished ones
     # are masked out by `done`.
     speeds = np.ones((S, K))
-    active = mask.copy()
+    active = present.copy()
     frozen = np.full((S, K), -1, np.int64)
     used = np.zeros((S, _N_AXES))
     done = np.zeros(S, bool)
@@ -267,10 +294,16 @@ def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
         rho = np.minimum(1.0, (speeds * u_ax).sum(1))
         skip = ((frozen == ai) | (u_ax <= 0.01)
                 | (u_ax >= 0.5 * np.maximum(rho, 1e-9)[:, None]))
-        infl += np.where(~skip & mask, gamma * rho[:, None] ** p, 0.0)
+        infl += np.where(~skip & present, gamma * rho[:, None] ** p, 0.0)
     slowdowns = base * infl
+    if excluded.any():
+        speeds = np.where(excluded, 0.0, speeds)
+        slowdowns = np.where(excluded, np.inf, slowdowns)
 
-    tot_slots = slots.sum(1)
+    # slot feasibility is fraction-aware: a partitioned member occupies
+    # only its slice of the SM partition, so its slot need scales with
+    # its fraction (excluded members were already zeroed above)
+    tot_slots = (slots * np.minimum(frac, 1.0)).sum(1)
     return BatchResult(
         names=names,
         mask=mask,

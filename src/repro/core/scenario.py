@@ -29,7 +29,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.profile import KernelProfile, ProfileMatrix
+from repro.core.profile import KernelProfile, ProfileMatrix, WorkloadProfile
 from repro.core.resources import DeviceModel
 
 
@@ -110,6 +110,33 @@ def compile_scenarios(scenarios: Sequence[Scenario]) -> CompiledScenarios:
         return CompiledScenarios(pm, dense, frac, n_victims)
     return CompiledScenarios(pm, members,
                              fractions if any_fraction else None, n_victims)
+
+
+def group_victim_scenarios(members: Sequence[WorkloadProfile],
+                           reps: Mapping[str, KernelProfile],
+                           slot_fraction: Optional[Mapping[str, float]] = None,
+                           device: Optional[DeviceModel] = None
+                           ) -> List[Scenario]:
+    """THE group-pricing probe set, shared by ``evaluate_group``, the
+    scheduler's batched group pricing, and the k-way fraction search:
+    one Scenario per member kernel — victim = that kernel, background =
+    every OTHER member's representative kernel (``reps``, keyed by
+    member name).
+
+    Row order of the solved batch is members in the given order, each
+    member's kernels in profile order (fold back per workload with
+    ``repro.core.fracsearch.member_slowdowns``).  Slot fractions follow
+    the estimator contract — they bind by KERNEL name, so a fraction
+    keyed by a workload's name restricts its representative (background)
+    kernel everywhere, and its victim kernels only when they share the
+    workload's name.
+    """
+    out: List[Scenario] = []
+    for m in members:
+        bg = tuple(reps[o.name] for o in members if o is not m)
+        for k in m.kernels:
+            out.append(Scenario((k,), bg, slot_fraction, device))
+    return out
 
 
 def scenario_device(scenarios: Sequence[Scenario],

@@ -25,13 +25,21 @@ one member at a time while the packed gain improves and every member
 stays within its SLO; group candidates are priced by the batched
 multi-kernel solver through the shared `Scenario` currency.
 
-Slot partitioning (the green-context analogue, paper §5.3) is tried for
-SLO-violating PAIRS as before; partitioned pairs are never grown (a
-k-way fraction split is a different search problem — see ROADMAP).
+Slot partitioning (the green-context analogue, paper §5.3) runs the
+k-way slot-fraction search (`repro.core.fracsearch`) for SLO-violating
+groups: coarse simplex fraction vectors plus a sensitivity-guided
+refinement step, every (group x fraction-vector) candidate priced in one
+deduplicated batched solve.  Partitioned pairs grow into partitioned
+k-way groups the same way full-share pairs do (each candidate group
+re-searches its fractions), with the best fractions cached in ``_group``
+alongside the gains.  ``FractionSearchConfig`` tunes the search;
+``LEGACY_SEARCH`` (coarse-only, no partitioned growth) reproduces the
+seed planner's fixed first-member grid bit-for-bit.
 
 ``plan_colocation`` / ``evaluate_pair`` / ``evaluate_pair_partitioned``
 remain as deprecated thin wrappers (a cold scheduler with
-``max_group_size=2`` reproduces their output exactly; pinned by tests).
+``max_group_size=2`` and ``LEGACY_SEARCH`` reproduces their output
+exactly; pinned by tests).
 """
 from __future__ import annotations
 
@@ -42,11 +50,17 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.estimator import solve_batch, solve_scenarios, workload_slowdown
+from repro.core.estimator import FRACTION_FLOOR, solve_batch, solve_scenarios
+from repro.core.fracsearch import (LEGACY_SEARCH, FractionSearchConfig,
+                                   group_metrics, member_slowdowns,
+                                   search_group_fractions,
+                                   simplex_candidates)
 from repro.core.profile import KernelProfile, ProfileMatrix, WorkloadProfile
 from repro.core.resources import DeviceModel
-from repro.core.scenario import Scenario
+from repro.core.scenario import Scenario, group_victim_scenarios
 
+# the legacy pair grid — identical to the k=2 coarse simplex at 4 steps
+# (kept as the deprecated `evaluate_pair_partitioned` shim's default)
 _PARTITION_FRACTIONS = (0.25, 0.5, 0.75)
 _PAIR_BLOCK = 16384          # pairs per batched solve: bounds peak memory
 
@@ -71,23 +85,9 @@ def _rep_kernel(w: WorkloadProfile, dev: DeviceModel) -> KernelProfile:
     return w.representative_kernel(dev)
 
 
-def _group_metrics(times: Sequence[float], slows: Sequence[float],
-                   slos: Sequence[float]) -> Tuple[float, bool]:
-    """THE definition of a placement's packed gain (serial time /
-    colocated makespan) and SLO feasibility, for any group size.
-    `evaluate_group` and the scheduler's batched group pricing both call
-    it; `_pair_metrics` below is its vectorized two-member twin for the
-    pairwise hot path — keep the three in lockstep."""
-    serial = sum(times)
-    makespan = max((t * r for t, r in zip(times, slows)), default=0.0)
-    gain = serial / max(makespan, 1e-12)
-    meets = all(r <= s for r, s in zip(slows, slos))
-    return float(gain), bool(meets)
-
-
 def _pair_metrics(ta, tb, ra, rb, slo_a, slo_b):
-    """Vectorized two-member `_group_metrics` (array-of-pairs form) for
-    _PairEvaluator's hot path — same floor, same comparisons."""
+    """Vectorized two-member `fracsearch.group_metrics` (array-of-pairs
+    form) for _PairEvaluator's hot path — same floor, same comparisons."""
     gain = (ta + tb) / np.maximum(np.maximum(ta * ra, tb * rb), 1e-12)
     meets = (ra <= slo_a) & (rb <= slo_b)
     return gain, meets
@@ -101,40 +101,61 @@ def evaluate_group(workloads: Sequence[WorkloadProfile], dev: DeviceModel,
                    slot_fraction: Optional[Dict[str, float]] = None
                    ) -> Placement:
     """Price one candidate group: every member's workload-level slowdown
-    against the other members' representative kernels, packed gain =
+    against the other members' representative kernels (one batched solve
+    over the shared `group_victim_scenarios` probe set), packed gain =
     serial time / colocated makespan, SLO feasibility of all members.
     For two members this is exactly the legacy ``evaluate_pair``."""
     works = list(workloads)
     reps = {w.name: w.representative_kernel(dev) for w in works}
-    slows: Dict[str, float] = {}
-    for w in works:
-        others = [reps[o.name] for o in works if o is not w]
-        slows[w.name] = workload_slowdown(w, others, dev, slot_fraction)
-    gain, meets = _group_metrics([w.total_time(dev) for w in works],
-                                 [slows[w.name] for w in works],
-                                 [w.slo_slowdown for w in works])
+    scenarios = group_victim_scenarios(works, reps, slot_fraction)
+    if scenarios:
+        victim_slows = solve_scenarios(scenarios, dev).slowdowns[:, 0]
+    else:
+        victim_slows = np.zeros(0)
+    slows = member_slowdowns(works, dev, victim_slows)
+    gain, meets = group_metrics([w.total_time(dev) for w in works],
+                                [slows[w.name] for w in works],
+                                [w.slo_slowdown for w in works])
     return Placement([w.name for w in works], dict(slot_fraction or {}),
                      {n: float(s) for n, s in slows.items()}, meets, gain)
 
 
 def evaluate_group_partitioned(workloads: Sequence[WorkloadProfile],
                                dev: DeviceModel,
-                               fractions: Sequence[float] = _PARTITION_FRACTIONS
+                               fractions: Optional[Sequence[float]] = None,
+                               *, search: Optional[FractionSearchConfig] = None
                                ) -> Placement:
-    """Full sharing first, then slot partitions (green contexts): the
-    first member gets fraction f, the others split the complement."""
+    """Full sharing first, then slot partitions (green contexts) via the
+    k-way slot-fraction search: coarse simplex fraction vectors plus a
+    sensitivity-guided refinement step, all candidates priced in one
+    deduplicated batched solve (`repro.core.fracsearch`).
+
+    ANY SLO-meeting partition beats an infeasible full-share placement,
+    regardless of its gain (the legacy ``gain > 0`` comparison discarded
+    feasible non-positive-gain partitions).
+
+    ``fractions`` is the DEPRECATED legacy grid: explicit first-member
+    fractions, the other members splitting the complement evenly, priced
+    without refinement (what the ``evaluate_pair_partitioned`` shim
+    forwards — bit-identical to the seed).  Tune the full search with
+    ``search=FractionSearchConfig(...)`` instead.
+    """
     works = list(workloads)
     best = evaluate_group(works, dev)
     if best.meets_slo:
         return best
-    rest = max(len(works) - 1, 1)
-    for f in fractions:
-        sf = {works[0].name: f}
-        sf.update({w.name: (1.0 - f) / rest for w in works[1:]})
-        cand = evaluate_group(works, dev, sf)
-        if cand.meets_slo and cand.throughput_gain > (best.throughput_gain
-                                                      if best.meets_slo else 0):
-            best = cand
+    names = [w.name for w in works]
+    if fractions is not None:
+        rest = max(len(works) - 1, 1)
+        cands = [[(f,) + ((1.0 - f) / rest,) * rest for f in fractions]]
+        res = search_group_fractions([works], dev, LEGACY_SEARCH,
+                                     candidates=cands)[0]
+    else:
+        res = search_group_fractions([works], dev, search)[0]
+    if res.meets_slo:
+        return Placement(names, dict(zip(names, map(float, res.fractions))),
+                         {n: float(s) for n, s in res.slowdowns.items()},
+                         True, float(res.gain))
     return best
 
 
@@ -209,23 +230,31 @@ class _PairEvaluator:
             [name_to_w.get(k.name, -1)
              for w in self.works for k in w.kernels], np.int64)
 
-    def evaluate(self, ia: np.ndarray, ib: np.ndarray,
-                 frac: Optional[float] = None):
+    def evaluate(self, ia: np.ndarray, ib: np.ndarray, frac=None):
         """Slowdowns/gain/SLO arrays for pairs (ia[p], ib[p]); `frac`
-        gives workload ia a slot fraction of `frac` and ib the complement
-        (None = full sharing), matching evaluate_pair's convention."""
+        gives workload ia a slot fraction and ib its own: a scalar f
+        means (f, 1-f) — evaluate_pair's legacy convention — and a
+        (fa, fb) pair of scalars or per-pair arrays prices an arbitrary
+        fraction vector per pair (None = full sharing)."""
         P = len(ia)
+        if frac is not None:
+            fa, fb = (frac, 1.0 - frac) if np.isscalar(frac) else frac
+            fa = np.broadcast_to(np.asarray(fa, np.float64), (P,))
+            fb = np.broadcast_to(np.asarray(fb, np.float64), (P,))
+            frac = (fa, fb)
         ra = np.empty(P)
         rb = np.empty(P)
         for lo in range(0, P, _PAIR_BLOCK):
             hi = min(lo + _PAIR_BLOCK, P)
-            ra[lo:hi], rb[lo:hi] = self._block(ia[lo:hi], ib[lo:hi], frac)
+            blk = None if frac is None else (frac[0][lo:hi], frac[1][lo:hi])
+            ra[lo:hi], rb[lo:hi] = self._block(ia[lo:hi], ib[lo:hi], blk)
         gain, meets = _pair_metrics(self.totals[ia], self.totals[ib], ra, rb,
                                     self.slos[ia], self.slos[ib])
         return ra, rb, gain, meets
 
     def _probe_side(self, probed, other, frac_probed, frac_other):
-        """Scenarios probing `probed`'s kernels against `other`'s rep."""
+        """Scenarios probing `probed`'s kernels against `other`'s rep.
+        `frac_probed`/`frac_other` are per-pair arrays (or None)."""
         cnt = self.counts[probed]
         owner = np.repeat(np.arange(len(probed)), cnt)
         start = np.repeat(np.cumsum(cnt) - cnt, cnt)
@@ -237,17 +266,18 @@ class _PairEvaluator:
         else:
             # the probed kernel matches the sf dict only by name identity
             kw = self.kernel_name_w[krow]
-            f0 = np.where(kw == np.repeat(probed, cnt), frac_probed,
-                          np.where(kw == np.repeat(other, cnt), frac_other,
-                                   1.0))
-            fr = np.stack([f0, np.full(len(krow), frac_other)], 1)
+            fp = np.repeat(frac_probed, cnt)
+            fo = np.repeat(frac_other, cnt)
+            f0 = np.where(kw == np.repeat(probed, cnt), fp,
+                          np.where(kw == np.repeat(other, cnt), fo, 1.0))
+            fr = np.stack([f0, fo], 1)
         return members, fr, owner, self.kernel_weight[krow]
 
     def _block(self, ia, ib, frac):
         m_a, f_a, own_a, w_a = self._probe_side(
-            ia, ib, frac, None if frac is None else 1.0 - frac)
+            ia, ib, *((None, None) if frac is None else frac))
         m_b, f_b, own_b, w_b = self._probe_side(
-            ib, ia, None if frac is None else 1.0 - frac, frac)
+            ib, ia, *((None, None) if frac is None else (frac[1], frac[0])))
         members = np.concatenate([m_a, m_b])
         fractions = None if frac is None else np.concatenate([f_a, f_b])
         self.scenarios_solved += len(members)
@@ -279,10 +309,12 @@ class Plan:
         return (gains + len(self.solo)) / devices
 
 
-# price tuples: pair -> (slow_lo, slow_hi, gain, meets, frac) ordered by
-# the members' (stable) arrival positions; group -> (gain, meets, slows)
-_PairPrice = Tuple[float, float, float, bool, float]
-_GroupPrice = Tuple[float, bool, Dict[str, float]]
+# price tuples, ordered by the members' (stable) arrival positions:
+# pair -> (slow_lo, slow_hi, gain, meets, frac_lo, frac_hi) with NaN
+# fractions meaning full sharing; group -> (gain, meets, slows,
+# fractions) with an empty fraction dict for full-share groups
+_PairPrice = Tuple[float, float, float, bool, float, float]
+_GroupPrice = Tuple[float, bool, Dict[str, float], Dict[str, float]]
 
 
 class ColocationScheduler:
@@ -294,6 +326,13 @@ class ColocationScheduler:
     >>> sched.remove("decode")       # zero estimator work
     >>> plan = sched.plan()          # replays greedy over cached prices
 
+    SLO-violating pairs fall back to slot partitioning via the k-way
+    fraction search (``fraction_search`` tunes it; see
+    ``FractionSearchConfig``), and partitioned pairs grow into
+    partitioned k-way groups exactly like full-share pairs do — each
+    candidate group re-searches its fraction vector, cached in
+    ``_group`` alongside the gain.
+
     Pricing is lazy: ``submit``/``remove`` are O(1) bookkeeping, and the
     next ``plan()`` prices exactly the pairs that have never been priced
     (one batched solve). ``stats["scenarios_solved"]`` counts estimator
@@ -302,17 +341,23 @@ class ColocationScheduler:
     """
 
     def __init__(self, dev: DeviceModel, max_group_size: int = 2,
-                 allow_partition: bool = True):
+                 allow_partition: bool = True,
+                 fraction_search: Optional[FractionSearchConfig] = None):
         if max_group_size < 2:
             raise ValueError("max_group_size must be >= 2")
         self.dev = dev
         self.max_group_size = int(max_group_size)
         self.allow_partition = allow_partition
+        # default: coarse simplex + 1 refinement level, partitioned
+        # growth on; LEGACY_SEARCH reproduces the seed's fixed grid
+        self.search = fraction_search or FractionSearchConfig()
         self._works: Dict[str, WorkloadProfile] = {}   # insertion-ordered
         self._uid: Dict[str, int] = {}
         self._next_uid = 0
         self._pair: Dict[Tuple[int, int], _PairPrice] = {}
-        self._group: Dict[Tuple[int, ...], _GroupPrice] = {}
+        # keyed by (sorted member uids, "full" | "part"): the same uid
+        # set can hold both a full-share and a partitioned price
+        self._group: Dict[Tuple[Tuple[int, ...], str], _GroupPrice] = {}
         self._reps: Dict[int, KernelProfile] = {}
         self.stats: Dict[str, int] = {
             "scenarios_solved": 0, "pairs_priced": 0, "groups_priced": 0,
@@ -361,7 +406,7 @@ class ColocationScheduler:
         self._reps.pop(uid, None)
         for key in [k for k in self._pair if uid in k]:
             del self._pair[key]
-        for key in [k for k in self._group if uid in k]:
+        for key in [k for k in self._group if uid in k[0]]:
             del self._group[key]
 
     def _rep(self, name: str) -> KernelProfile:
@@ -387,76 +432,135 @@ class ColocationScheduler:
         ia = np.fromiter((i for i, _ in missing), np.int64, len(missing))
         ib = np.fromiter((j for _, j in missing), np.int64, len(missing))
         ra, rb, gain, meets = ev.evaluate(ia, ib)       # full-sharing pass
-        frac = np.full(len(ia), np.nan)                 # nan = full sharing
+        fa = np.full(len(ia), np.nan)                   # nan = full sharing
+        fb = np.full(len(ia), np.nan)
 
         if self.allow_partition:
-            # green-context fallback for SLO-violating pairs: same
-            # selection rule as evaluate_group_partitioned, batched per
-            # fraction
             failing = np.flatnonzero(~meets)
             if failing.size:
-                fia, fib = ia[failing], ib[failing]
-                best_gain = np.zeros(failing.size)   # full share failed -> 0
-                for f in _PARTITION_FRACTIONS:
-                    cra, crb, cgain, cmeets = ev.evaluate(fia, fib, frac=f)
-                    take = cmeets & (cgain > best_gain)
-                    best_gain = np.where(take, cgain, best_gain)
-                    sel = failing[take]
-                    ra[sel], rb[sel] = cra[take], crb[take]
-                    gain[sel], meets[sel] = cgain[take], True
-                    frac[sel] = f
+                bra, brb, bgain, bmeets, bfa, bfb = self._search_pair_fractions(
+                    ev, ia[failing], ib[failing])
+                sel = failing[bmeets]
+                ra[sel], rb[sel] = bra[bmeets], brb[bmeets]
+                gain[sel] = bgain[bmeets]
+                meets[sel] = True
+                fa[sel], fb[sel] = bfa[bmeets], bfb[bmeets]
 
         for p, (i, j) in enumerate(missing):
             self._pair[(uids[i], uids[j])] = (
                 float(ra[p]), float(rb[p]), float(gain[p]), bool(meets[p]),
-                float(frac[p]))
+                float(fa[p]), float(fb[p]))
         self.stats["scenarios_solved"] += ev.scenarios_solved
         self.stats["pairs_priced"] += len(missing)
 
+    def _search_pair_fractions(self, ev: _PairEvaluator, fia: np.ndarray,
+                               fib: np.ndarray):
+        """The k=2 slot-fraction search on the DENSE pair-evaluator path:
+        the green-context fallback for SLO-violating pairs, array-
+        vectorized across all failing pairs per candidate vector (no
+        per-probe Python objects on the O(n^2) pricing hot path).
+
+        Selection and refinement mirror `fracsearch` exactly — feasible
+        max-gain (earliest candidate on ties; ANY feasible partition
+        beats the infeasible full share), least-violating anchor
+        otherwise, refinement moving delta toward the binding member —
+        and tests pin this path against `search_group_fractions` and the
+        scalar oracle at 1e-9.  Keep the two in lockstep."""
+        F = len(fia)
+        slo_a, slo_b = ev.slos[fia], ev.slos[fib]
+        ta, tb = ev.totals[fia], ev.totals[fib]
+        bmeets = np.zeros(F, bool)
+        bgain = np.full(F, -np.inf)
+        bviol = np.full(F, np.inf)
+        bra = np.empty(F)
+        brb = np.empty(F)
+        bfa = np.empty(F)
+        bfb = np.empty(F)
+
+        def consider(valid, f1, f2):
+            cra, crb, cgain, cmeets = ev.evaluate(fia, fib, frac=(f1, f2))
+            viol = np.maximum(cra / np.maximum(slo_a, 1e-12),
+                              crb / np.maximum(slo_b, 1e-12))
+            take = valid & ((cmeets & ~bmeets)
+                            | (cmeets & bmeets & (cgain > bgain))
+                            | (~cmeets & ~bmeets & (viol < bviol)))
+            for dst, src in ((bmeets, cmeets), (bgain, cgain),
+                             (bviol, viol), (bra, cra), (brb, crb),
+                             (bfa, f1), (bfb, f2)):
+                dst[take] = np.broadcast_to(src, (F,))[take]
+
+        steps = self.search.steps_for(2)
+        every = np.ones(F, bool)
+        for f1, f2 in simplex_candidates(2, steps):
+            consider(every, np.full(F, f1), np.full(F, f2))
+        for level in range(1, self.search.refine_levels + 1):
+            delta = 1.0 / (steps * 2 ** level)
+            # sensitivity guidance, the two-member specialization: move
+            # delta toward the makespan owner (feasible) or the worse
+            # SLO violator; argmax ties resolve to the first member
+            recv_a = np.where(bmeets, ta * bra >= tb * brb,
+                              bra / np.maximum(slo_a, 1e-12)
+                              >= brb / np.maximum(slo_b, 1e-12))
+            f1 = np.where(recv_a, bfa + delta, bfa - delta)
+            f2 = np.where(recv_a, bfb - delta, bfb + delta)
+            donor_left = np.where(recv_a, bfb, bfa) - delta
+            consider(donor_left > FRACTION_FLOOR, f1, f2)
+        return bra, brb, bgain, bmeets, bfa, bfb
+
     def _price_groups(self, works: List[WorkloadProfile], uids: List[int],
-                      group: List[int], cands: List[int]
-                      ) -> List[_GroupPrice]:
-        """Price group+{c} for every candidate c in ONE batched solve via
+                      group: List[int], cands: List[int],
+                      partitioned: bool = False) -> List[_GroupPrice]:
+        """Price group+{c} for every candidate c in ONE batched pass via
         the Scenario currency: each member kernel is a victim against the
         other members' representative kernels (the same probe the
-        pairwise matrix uses, widened to k members)."""
-        missing = [c for c in cands
-                   if tuple(sorted(uids[m] for m in group + [c]))
-                   not in self._group]
+        pairwise matrix uses, widened to k members).  Partitioned groups
+        run the k-way slot-fraction search instead of a full-share solve
+        and cache their best fractions alongside the gain.  Members are
+        priced in canonical works-index order, so a cached price never
+        depends on the greedy path that first produced it."""
+        mode = "part" if partitioned else "full"
+
+        def key(c: int) -> Tuple[Tuple[int, ...], str]:
+            return tuple(sorted(uids[m] for m in group + [c])), mode
+
+        missing = [c for c in cands if key(c) not in self._group]
         if missing:
-            scenarios: List[Scenario] = []
-            spans: List[Tuple[int, List[int]]] = []   # (cand, member order)
-            for c in missing:
-                g = group + [c]
-                reps = {m: self._rep(works[m].name) for m in g}
-                for m in g:
-                    bg = tuple(reps[o] for o in g if o != m)
-                    for k in works[m].kernels:
-                        scenarios.append(Scenario((k,), bg, device=self.dev))
-                spans.append((c, g))
-            br = solve_scenarios(scenarios)
-            self.stats["scenarios_solved"] += len(scenarios)
+            member_sets = [sorted(group + [c]) for c in missing]
+            reps = {works[m].name: self._rep(works[m].name)
+                    for g in member_sets for m in g}
+            if partitioned:
+                found = search_group_fractions(
+                    [[works[m] for m in g] for g in member_sets],
+                    self.dev, self.search, reps=reps, stats=self.stats)
+                for g, r in zip(member_sets, found):
+                    names = [works[m].name for m in g]
+                    self._group[(tuple(sorted(uids[m] for m in g)), mode)] = (
+                        float(r.gain), bool(r.meets_slo),
+                        {n: float(s) for n, s in r.slowdowns.items()},
+                        dict(zip(names, map(float, r.fractions)))
+                        if r.meets_slo else {})
+            else:
+                scenarios: List[Scenario] = []
+                for g in member_sets:
+                    scenarios.extend(group_victim_scenarios(
+                        [works[m] for m in g], reps, device=self.dev))
+                br = solve_scenarios(scenarios)
+                self.stats["scenarios_solved"] += len(scenarios)
+                row = 0
+                for g in member_sets:
+                    members = [works[m] for m in g]
+                    n_rows = sum(len(w.kernels) for w in members)
+                    slows = member_slowdowns(
+                        members, self.dev, br.slowdowns[row:row + n_rows, 0])
+                    row += n_rows
+                    gain, meets = group_metrics(
+                        [w.total_time(self.dev) for w in members],
+                        [slows[w.name] for w in members],
+                        [w.slo_slowdown for w in members])
+                    self._group[(tuple(sorted(uids[m] for m in g)), mode)] = (
+                        gain, meets, slows, {})
             self.stats["groups_priced"] += len(missing)
-            row = 0
-            for c, g in spans:
-                slows: Dict[str, float] = {}
-                for m in g:
-                    w = works[m]
-                    tot_iso = tot_col = 0.0
-                    for k in w.kernels:
-                        t = k.isolated_time(self.dev) * k.duration_weight
-                        tot_iso += t
-                        tot_col += t * float(br.slowdowns[row, 0])
-                        row += 1
-                    slows[w.name] = tot_col / max(tot_iso, 1e-12)
-                gain, meets = _group_metrics(
-                    [works[m].total_time(self.dev) for m in g],
-                    [slows[works[m].name] for m in g],
-                    [works[m].slo_slowdown for m in g])
-                self._group[tuple(sorted(uids[m] for m in g))] = (
-                    gain, meets, slows)
-        return [self._group[tuple(sorted(uids[m] for m in group + [c]))]
-                for c in cands]
+        return [self._group[key(c)] for c in cands]
 
     # ----------------------------- planning ----------------------- #
     def plan(self) -> Plan:
@@ -490,16 +594,18 @@ class ColocationScheduler:
             if -neg_gain <= 1.0:
                 break
             i, j = int(i), int(j)
-            ra, rb, g, _, f = prices[int(p)]
+            ra, rb, g, _, f_lo, f_hi = prices[int(p)]
             group = [i, j]
             slows = {names[i]: ra, names[j]: rb}
-            if np.isnan(f):
+            if np.isnan(f_lo):
                 sf: Dict[str, float] = {}
-                if self.max_group_size > 2:
-                    group, slows, g = self._grow(works, uids, placed,
-                                                 group, slows, g)
             else:
-                sf = {names[i]: f, names[j]: 1.0 - f}
+                sf = {names[i]: f_lo, names[j]: f_hi}
+            if self.max_group_size > 2 and (
+                    np.isnan(f_lo) or self.search.grow_partitioned):
+                group, slows, g, sf = self._grow(
+                    works, uids, placed, group, slows, g,
+                    None if np.isnan(f_lo) else sf)
             placements.append(Placement(
                 [names[m] for m in group], sf,
                 {nm: float(s) for nm, s in slows.items()}, True, float(g)))
@@ -507,36 +613,45 @@ class ColocationScheduler:
         solo = sorted(names[i] for i in np.flatnonzero(~placed))
         return Plan(placements, solo)
 
-    def _grow(self, works, uids, placed, group, slows, gain):
+    def _grow(self, works, uids, placed, group, slows, gain, fractions):
         """Greedy group growth: add the unplaced workload that most
         improves the packed gain while keeping every member (old and new)
-        within SLO; stop at max_group_size or when no candidate helps."""
+        within SLO; stop at max_group_size or when no candidate helps.
+        ``fractions`` None grows at full sharing; a fraction dict grows a
+        PARTITIONED group — every candidate group re-runs the slot-
+        fraction search, and the accepted candidate's best fractions
+        replace the group's."""
+        partitioned = fractions is not None
         while len(group) < self.max_group_size:
             cands = [c for c in range(len(works))
                      if not placed[c] and c not in group]
             if not cands:
                 break
-            priced = self._price_groups(works, uids, group, cands)
+            priced = self._price_groups(works, uids, group, cands,
+                                        partitioned)
             best = None
-            for c, (cg, cmeets, cslows) in zip(cands, priced):
+            for c, (cg, cmeets, cslows, cfracs) in zip(cands, priced):
                 if cmeets and cg > gain and (best is None or cg > best[1]):
-                    best = (c, cg, cslows)
+                    best = (c, cg, cslows, cfracs)
             if best is None:
                 break
             group.append(best[0])
-            gain = best[1]
-            slows = best[2]
-        return group, slows, gain
+            gain, slows = best[1], best[2]
+            if partitioned:
+                fractions = best[3]
+        return group, slows, gain, dict(fractions or {})
 
 
 def plan_colocation(workloads: Sequence[WorkloadProfile], dev: DeviceModel,
                     allow_partition: bool = True) -> Plan:
     """Deprecated one-shot pairing: a cold ``ColocationScheduler`` with
-    ``max_group_size=2`` (identical plans, pinned by tests)."""
+    ``max_group_size=2`` and the legacy fixed-grid fraction search
+    (identical plans, pinned by tests)."""
     warnings.warn("plan_colocation is deprecated; use ColocationScheduler "
                   "(submit/remove/plan)", DeprecationWarning, stacklevel=2)
     sched = ColocationScheduler(dev, max_group_size=2,
-                                allow_partition=allow_partition)
+                                allow_partition=allow_partition,
+                                fraction_search=LEGACY_SEARCH)
     for w in workloads:
         sched.submit(w)          # dedup: last profile wins, first position
     return sched.plan()

@@ -21,9 +21,10 @@ from dataclasses import dataclass
 from typing import Dict, List, Sequence
 
 from repro.core.estimator import solve_scenarios
-from repro.core.profile import KernelProfile
+from repro.core.fracsearch import member_slowdowns
+from repro.core.profile import KernelProfile, WorkloadProfile
 from repro.core.resources import RESOURCE_AXES, DeviceModel
-from repro.core.scenario import Scenario
+from repro.core.scenario import Scenario, group_victim_scenarios
 
 
 def stressor(axis: str, intensity: float, dev: DeviceModel,
@@ -84,6 +85,40 @@ def sensitivity(kernel: KernelProfile, dev: DeviceModel,
                 lambdas: Sequence[float] = (0.1, 0.25, 0.5, 0.75, 0.9),
                 axes: Sequence[str] = RESOURCE_AXES) -> SensitivityReport:
     return sensitivity_batch([kernel], dev, lambdas, axes)[0]
+
+
+def partition_curve(workloads: Sequence[WorkloadProfile], dev: DeviceModel,
+                    member: int, fractions: Sequence[float]
+                    ) -> Dict[str, List[float]]:
+    """Paper §5.3 sweep: every member's workload slowdown as ``member``'s
+    slot fraction varies (the others split the complement evenly) — the
+    one-dimensional ray of the simplex the legacy fixed grid explored,
+    exposed as a diagnostic for the k-way fraction search.  The whole
+    (fractions x member-kernel) grid is ONE batched solve.
+    """
+    works = list(workloads)
+    fractions = list(fractions)
+    if not works or not fractions:
+        return {}
+    if not 0 <= member < len(works):
+        raise ValueError(f"member index {member} out of range for "
+                         f"{len(works)} workloads")
+    reps = {w.name: w.representative_kernel(dev) for w in works}
+    rest = max(len(works) - 1, 1)
+    scenarios = []
+    for f in fractions:
+        sf = {w.name: (f if i == member else (1.0 - f) / rest)
+              for i, w in enumerate(works)}
+        scenarios.extend(group_victim_scenarios(works, reps, sf))
+    br = solve_scenarios(scenarios, dev)
+    rows_per = sum(len(w.kernels) for w in works)
+    curves: Dict[str, List[float]] = {w.name: [] for w in works}
+    for fi in range(len(fractions)):
+        slows = member_slowdowns(
+            works, dev, br.slowdowns[fi * rows_per:(fi + 1) * rows_per, 0])
+        for n, s in slows.items():
+            curves[n].append(float(s))
+    return curves
 
 
 def cache_pollution_curve(kernel: KernelProfile, dev: DeviceModel,

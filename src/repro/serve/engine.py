@@ -32,6 +32,9 @@ from repro.models.layers import rmsnorm, unembed, embed
 from repro.serve.kvcache import Sequence, SlotAllocator
 
 
+_MIN_CHUNK = 16      # smallest prefill chunk the scheduler will schedule
+
+
 @dataclass
 class EngineConfig:
     max_slots: int = 8
@@ -123,10 +126,13 @@ class Engine:
     def _pick_chunk(self, seq: Sequence, n_active_decodes: int) -> int:
         """Largest chunk whose colocation keeps predicted decode TBT within
         the SLO (paper §5.1 estimator-in-the-loop). Every halving candidate
-        is one `Scenario` (victim = the decode batch, background = the
-        chunk), priced in a single batched solve: predicted TBT = the
-        decode step inflated by the chunk's interference, plus the chunk
-        itself serialized on the core it is interleaved with."""
+        down to and INCLUDING the floor chunk is one `Scenario` (victim =
+        the decode batch, background = the chunk), priced in a single
+        batched solve: predicted TBT = the decode step inflated by the
+        chunk's interference, plus the chunk itself serialized on the core
+        it is interleaved with.  When no candidate passes, the fallback is
+        estimator-backed too: the priced candidate with the lowest
+        predicted TBT."""
         remaining = seq.prompt_len - seq.pos
         if self.ecfg.mode == "serial":
             return remaining
@@ -136,11 +142,10 @@ class Engine:
             return min(self.ecfg.prefill_chunk * 4, remaining)
         chunk = min(self.ecfg.prefill_chunk, remaining)
         cands = []
-        while chunk > 16:
+        while chunk > _MIN_CHUNK:
             cands.append(chunk)
             chunk //= 2
-        if not cands:
-            return max(chunk, 16)
+        cands.append(max(chunk, _MIN_CHUNK))   # the floor chunk is priced too
         decode = self._phase_profile("decode", max(n_active_decodes, 1))
         chunks = [self._phase_profile(f"prefill{c}", c) for c in cands]
         br = solve_scenarios([Scenario((decode,), (ch,)) for ch in chunks],
@@ -152,7 +157,10 @@ class Engine:
         passing = np.flatnonzero(ok)
         if passing.size:
             return cands[passing[0]]
-        return max(cands[-1] // 2, 16)
+        # nothing keeps TBT within SLO: degrade to the estimator-backed
+        # minimum — the priced candidate with the lowest predicted TBT
+        # (the old fallback returned an unpriced cands[-1] // 2)
+        return cands[int(np.argmin(tbt_pred))]
 
     # ----------------------------- loop --------------------------- #
     def step(self) -> bool:

@@ -1,0 +1,467 @@
+"""k-way slot-fraction search: candidate enumeration, brute-force oracle
+equality, f->0 exclusion semantics, fraction-aware slot feasibility, the
+feasible-negative-gain-partition bugfix, scheduler integration invariants
+(fractions sum to <= 1, cache round-trips, online == cold), and the
+SLO-tight decode-heavy gate where partitioned k-way groups strictly beat
+the fixed-grid pair baseline."""
+import sys
+from math import comb
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "benchmarks"))
+from bench_planner import decode_heavy_mix, random_workloads  # noqa: E402
+
+from repro.core import (FRACTION_FLOOR, LEGACY_SEARCH, TPU_V5E,  # noqa: E402
+                        ColocationScheduler, FractionSearchConfig,
+                        KernelProfile, WorkloadProfile, estimate,
+                        evaluate_group, evaluate_group_partitioned,
+                        search_group_fractions, simplex_candidates,
+                        solve_scenarios)
+from repro.core.estimator import solve_batch  # noqa: E402
+from repro.core.fracsearch import refinement_candidates  # noqa: E402
+from repro.core.profile import ProfileMatrix  # noqa: E402
+from repro.core.resources import H100, RESOURCE_AXES  # noqa: E402
+from repro.core.scenario import Scenario  # noqa: E402
+
+TOL = 1e-9
+
+
+def cold(works, dev=TPU_V5E, k=2, search=None):
+    s = ColocationScheduler(dev, max_group_size=k, fraction_search=search)
+    for w in works:
+        s.submit(w)
+    return s
+
+
+# ------------------------------------------------------------------ #
+#  Candidate enumeration                                              #
+# ------------------------------------------------------------------ #
+def test_simplex_candidates_properties():
+    for k, steps in ((2, 4), (2, 8), (3, 5), (3, 8), (4, 6)):
+        cands = simplex_candidates(k, steps)
+        assert len(cands) == comb(steps - 1, k - 1)
+        assert len(set(cands)) == len(cands)
+        for vec in cands:
+            assert len(vec) == k
+            assert abs(sum(vec) - 1.0) <= 1e-12
+            assert all(f >= 1.0 / steps - 1e-12 for f in vec)
+        assert cands == sorted(cands)          # lexicographic order
+
+
+def test_simplex_k2_matches_legacy_grid():
+    """The coarse k=2 grid at 4 steps IS the seed's fixed grid (first
+    member ascending) — the compatibility anchor of LEGACY_SEARCH."""
+    assert simplex_candidates(2, 4) == [(0.25, 0.75), (0.5, 0.5),
+                                        (0.75, 0.25)]
+
+
+def test_simplex_candidates_validation():
+    with pytest.raises(ValueError, match="positive parts"):
+        simplex_candidates(3, 2)
+    with pytest.raises(ValueError, match="coarse_steps"):
+        FractionSearchConfig(coarse_steps=1)
+    with pytest.raises(ValueError, match="refine_levels"):
+        FractionSearchConfig(refine_levels=-1)
+
+
+# ------------------------------------------------------------------ #
+#  Brute-force oracle equality                                        #
+# ------------------------------------------------------------------ #
+def _oracle_search(works, dev, cfg):
+    """Independent scalar reimplementation of the search: price every
+    candidate with evaluate_group, apply the documented selection rule
+    (feasible max-gain, earliest on ties; else least-violating), then
+    the refinement levels around the running best."""
+    names = [w.name for w in works]
+    slos = [w.slo_slowdown for w in works]
+    times = [w.total_time(dev) for w in works]
+
+    def price(vec):
+        pl = evaluate_group(works, dev, dict(zip(names, vec)))
+        slows = [pl.predicted_slowdown[n] for n in names]
+        viol = max(s / max(o, 1e-12) for s, o in zip(slows, slos))
+        return (pl.meets_slo, pl.throughput_gain, viol, vec, slows)
+
+    def better(cand, cur):
+        if cur is None:
+            return True
+        if cand[0] != cur[0]:
+            return cand[0]
+        return (cand[1] > cur[1]) if cand[0] else (cand[2] < cur[2])
+
+    best = None
+    steps = cfg.steps_for(len(works))
+    for vec in simplex_candidates(len(works), steps):
+        cand = price(vec)
+        if better(cand, best):
+            best = cand
+    for level in range(1, cfg.refine_levels + 1):
+        delta = 1.0 / (steps * 2 ** level)
+        for vec in refinement_candidates(best[3], times, best[4], slos,
+                                         best[0], delta):
+            cand = price(vec)
+            if better(cand, best):
+                best = cand
+    return best
+
+
+@pytest.mark.parametrize("k", [2, 3])
+def test_search_matches_bruteforce_oracle(k):
+    """The batched, deduplicated search must equal the scalar grid
+    oracle at 1e-9 — fractions bit-identical, gains/slowdowns at TOL —
+    across random groups (feasible and infeasible outcomes both)."""
+    rng = np.random.default_rng(17)
+    cfg = FractionSearchConfig()
+    pool = random_workloads(rng, 6 * k, TPU_V5E)
+    groups = [pool[i * k:(i + 1) * k] for i in range(6)]
+    got = search_group_fractions(groups, TPU_V5E, cfg)
+    for g, r in zip(groups, got):
+        meets, gain, _, vec, slows = _oracle_search(g, TPU_V5E, cfg)
+        assert r.meets_slo == meets
+        assert r.fractions == tuple(vec)
+        assert r.gain == pytest.approx(gain, rel=TOL, abs=TOL)
+        for w, s in zip(g, slows):
+            assert r.slowdowns[w.name] == pytest.approx(s, rel=TOL, abs=TOL)
+
+
+def test_search_on_decode_heavy_mix_matches_oracle():
+    """Same oracle pin on the engineered SLO-tight mix (feasible
+    partitioned triples with extreme refined fractions)."""
+    mix = decode_heavy_mix(TPU_V5E)
+    cfg = FractionSearchConfig()
+    groups = [mix[:2], mix[:3], [mix[0], mix[1], mix[4]]]
+    got = search_group_fractions(groups, TPU_V5E, cfg)
+    for g, r in zip(groups, got):
+        meets, gain, _, vec, _ = _oracle_search(g, TPU_V5E, cfg)
+        assert r.meets_slo == meets
+        assert r.fractions == tuple(vec)
+        assert r.gain == pytest.approx(gain, rel=TOL, abs=TOL)
+
+
+def test_search_explicit_candidates_matches_legacy_loop():
+    """The explicit-candidates path (what evaluate_group_partitioned's
+    deprecated `fractions` argument uses) equals a hand-rolled
+    first-member sweep over evaluate_group."""
+    rng = np.random.default_rng(23)
+    works = random_workloads(rng, 3, TPU_V5E)
+    names = [w.name for w in works]
+    fracs = (0.25, 0.5, 0.75)
+    cands = [[(f, (1.0 - f) / 2, (1.0 - f) / 2) for f in fracs]]
+    res = search_group_fractions([works], TPU_V5E, candidates=cands)[0]
+    best = None
+    for vec in cands[0]:
+        pl = evaluate_group(works, TPU_V5E, dict(zip(names, vec)))
+        if pl.meets_slo and (best is None
+                             or pl.throughput_gain > best.throughput_gain):
+            best = pl
+    if best is None:
+        assert not res.meets_slo
+    else:
+        assert res.meets_slo
+        assert dict(zip(names, res.fractions)) == best.slot_fraction
+        assert res.gain == pytest.approx(best.throughput_gain, rel=TOL,
+                                         abs=TOL)
+
+
+def test_scheduler_dense_pair_search_matches_generic():
+    """The scheduler prices SLO-failing pairs on a dense array fast path
+    (`_search_pair_fractions`); it must produce exactly what the generic
+    `search_group_fractions` produces for the same pairs — fractions
+    bit-identical, slowdowns/gains at 1e-9 — across random pools where
+    many pairs violate (the lockstep contract of the two code paths)."""
+    rng = np.random.default_rng(31)
+    works = random_workloads(rng, 14, TPU_V5E)
+    sched = cold(works)
+    sched.plan()
+    checked = 0
+    for (ui, uj), price in sched._pair.items():
+        i = next(k for k, w in enumerate(works) if sched._uid[w.name] == ui)
+        j = next(k for k, w in enumerate(works) if sched._uid[w.name] == uj)
+        full = evaluate_group([works[i], works[j]], TPU_V5E)
+        if full.meets_slo:
+            continue                      # partition search never ran
+        checked += 1
+        res = search_group_fractions([[works[i], works[j]]], TPU_V5E,
+                                     sched.search)[0]
+        slow_i, slow_j, gain, meets, f_i, f_j = price
+        assert meets == res.meets_slo
+        if not meets:
+            continue                      # cached as the full-share price
+        assert (f_i, f_j) == res.fractions
+        assert gain == pytest.approx(res.gain, rel=TOL, abs=TOL)
+        assert slow_i == pytest.approx(res.slowdowns[works[i].name],
+                                       rel=TOL, abs=TOL)
+        assert slow_j == pytest.approx(res.slowdowns[works[j].name],
+                                       rel=TOL, abs=TOL)
+    assert checked >= 10, "draw exercised too few failing pairs"
+
+
+def test_search_rejects_singleton_groups():
+    rng = np.random.default_rng(29)
+    w = random_workloads(rng, 1, TPU_V5E)
+    with pytest.raises(ValueError, match=">= 2"):
+        search_group_fractions([w], TPU_V5E)
+
+
+def test_search_empty_candidates_degrades_gracefully():
+    """Zero explicit candidates must yield an infeasible no-fraction
+    result (and the partitioned wrapper must fall back to the full-share
+    placement), not a crash."""
+    rng = np.random.default_rng(37)
+    works = random_workloads(rng, 2, TPU_V5E)
+    res = search_group_fractions([works], TPU_V5E, candidates=[[]])[0]
+    assert not res.meets_slo and res.fractions == ()
+    full = evaluate_group(works, TPU_V5E)
+    got = evaluate_group_partitioned(works, TPU_V5E, fractions=())
+    assert got.slot_fraction == {}
+    assert got.meets_slo == full.meets_slo
+    assert got.throughput_gain == pytest.approx(full.throughput_gain,
+                                                rel=TOL, abs=TOL)
+
+
+def test_partition_curve_validates_member_index():
+    from repro.core import partition_curve
+    rng = np.random.default_rng(43)
+    works = random_workloads(rng, 2, TPU_V5E)
+    with pytest.raises(ValueError, match="out of range"):
+        partition_curve(works, TPU_V5E, member=5, fractions=(0.25,))
+
+
+# ------------------------------------------------------------------ #
+#  f -> 0 exclusion semantics (the floor the search relies on)        #
+# ------------------------------------------------------------------ #
+def _mk_kernel(name, util, dev=TPU_V5E):
+    d = {r: util * dev.capacity(r) for r in RESOURCE_AXES}
+    return KernelProfile(name, demand=d, duration=1.0)
+
+
+def test_zero_fraction_excludes_member():
+    """A member at fraction 0 is ABSENT: the others solve exactly as if
+    it were not in the scenario, and its own slowdown is +inf."""
+    a, b, c = (_mk_kernel(n, u) for n, u in
+               (("a", 0.6), ("b", 0.5), ("c", 0.4)))
+    pm = ProfileMatrix.from_profiles([a, b, c])
+    with_c = solve_batch(pm, np.array([[0, 1, 2]]), TPU_V5E,
+                         np.array([[1.0, 1.0, 0.0]]))
+    without_c = solve_batch(pm, np.array([[0, 1]]), TPU_V5E)
+    for j in range(2):
+        assert with_c.slowdowns[0, j] == pytest.approx(
+            without_c.slowdowns[0, j], rel=TOL, abs=TOL)
+        assert with_c.speeds[0, j] == pytest.approx(
+            without_c.speeds[0, j], rel=TOL, abs=TOL)
+    assert np.isinf(with_c.slowdowns[0, 2])
+    assert with_c.speeds[0, 2] == 0.0
+
+
+def test_fraction_floor_boundary():
+    """At the floor the member is excluded; just above it, it is live
+    (with the documented ~1/f demand scaling) — no 1e6x-inflated ghost
+    in between."""
+    a, b = _mk_kernel("a", 0.3), _mk_kernel("b", 0.3)
+    pm = ProfileMatrix.from_profiles([a, b])
+    at_floor = solve_batch(pm, np.array([[0, 1]]), TPU_V5E,
+                           np.array([[1.0, FRACTION_FLOOR]]))
+    assert np.isinf(at_floor.slowdowns[0, 1])
+    assert at_floor.slowdowns[0, 0] == pytest.approx(1.0, rel=1e-6)
+    above = solve_batch(pm, np.array([[0, 1]]), TPU_V5E,
+                        np.array([[1.0, 64 * FRACTION_FLOOR]]))
+    assert np.isfinite(above.slowdowns[0, 1])
+    # the live co-runner's huge scaled demand must not starve member a
+    # beyond the axis capacity it actually consumes
+    assert np.isfinite(above.slowdowns[0, 0])
+
+
+def test_exclusion_matches_estimate_wrapper():
+    """The exclusion semantics flow through the name-keyed wrapper."""
+    a, b = _mk_kernel("a", 0.7), _mk_kernel("b", 0.9)
+    r = estimate([a, b], TPU_V5E, {"b": 0.0})
+    solo = estimate([a], TPU_V5E)
+    assert r.slowdowns["a"] == pytest.approx(solo.slowdowns["a"], rel=TOL)
+    assert np.isinf(r.slowdowns["b"])
+
+
+# ------------------------------------------------------------------ #
+#  Fraction-aware slot feasibility                                    #
+# ------------------------------------------------------------------ #
+def test_slot_feasibility_scales_with_fractions():
+    """Two members each needing 80% of the SMs over-commit at full
+    share; partitioned to half the device each, their occupancy is
+    scaled by the fractions and fits."""
+    d = {r: 0.1 * H100.capacity(r) for r in RESOURCE_AXES}
+    big = int(0.8 * H100.n_slots)
+    a = KernelProfile("a", demand=dict(d), duration=1.0, slots_needed=big)
+    b = KernelProfile("b", demand=dict(d), duration=1.0, slots_needed=big)
+    pm = ProfileMatrix.from_profiles([a, b])
+    full = solve_batch(pm, np.array([[0, 1]]), H100)
+    assert not full.feasible_slots[0]
+    halved = solve_batch(pm, np.array([[0, 1]]), H100,
+                         np.array([[0.5, 0.5]]))
+    assert halved.feasible_slots[0]
+    # an excluded member's slots do not count at all
+    solo = solve_batch(pm, np.array([[0, 1]]), H100,
+                       np.array([[1.0, 0.0]]))
+    assert solo.feasible_slots[0]
+
+
+# ------------------------------------------------------------------ #
+#  Bugfix: feasible partitions with gain <= 0 must win over an        #
+#  infeasible full-share placement                                    #
+# ------------------------------------------------------------------ #
+def _negative_gain_pair(dev=TPU_V5E):
+    """A pair whose only feasible placement is a partition with NEGATIVE
+    packed gain: the victim carries a ghost phase with negative duration
+    weight (a synthetic accounting device), making the group's serial
+    time negative while the partition decision is exactly the real
+    SLO-rescue from the decode-heavy regime."""
+    d = {r: 0.0 for r in RESOURCE_AXES}
+    d.update({"mxu": 0.4 * dev.capacity("mxu"),
+              "hbm": 0.7 * dev.capacity("hbm"),
+              "l2": 0.7 * dev.capacity("l2")})
+    victim_kernel = KernelProfile("victim#step", demand=d, duration=1.0)
+    # the victim slows to ~1.167x at full share and 1.0x partitioned; a
+    # ghost at 1.1 sits between, so the WORKLOAD slowdown is hugely
+    # positive (SLO-violating) at full share and hugely negative
+    # (SLO-meeting) partitioned, while the group's serial time is < 0
+    ghost = KernelProfile("victim#ghost", demand={r: 0.0 for r in
+                                                  RESOURCE_AXES},
+                          duration=1.1, duration_weight=-1.0)
+    victim = WorkloadProfile("victim", (victim_kernel, ghost),
+                             slo_slowdown=1.2)
+    da = {r: 0.0 for r in RESOURCE_AXES}
+    da.update({"mxu": 0.9 * dev.capacity("mxu"),
+               "vpu": 0.2 * dev.capacity("vpu"),
+               "hbm": 0.6 * dev.capacity("hbm"),
+               "l2": 0.6 * dev.capacity("l2")})
+    aggressor = WorkloadProfile(
+        "aggressor", (KernelProfile("aggressor#step", demand=da,
+                                    duration=0.4, duration_weight=0.05),),
+        slo_slowdown=50.0)
+    return victim, aggressor
+
+
+def test_negative_gain_partition_is_kept():
+    victim, aggressor = _negative_gain_pair()
+    full = evaluate_group([victim, aggressor], TPU_V5E)
+    assert not full.meets_slo            # the placement partition rescues
+    part = evaluate_group_partitioned([victim, aggressor], TPU_V5E)
+    assert part.meets_slo, "feasible partition was discarded"
+    assert part.slot_fraction            # a real partition, not full share
+    assert part.throughput_gain <= 0.0   # the regression trigger
+
+
+def test_negative_gain_partition_scheduler_pair_cache_bit_identical():
+    """The batched pair pricing must cache the same feasible partition
+    the scalar evaluate_group_partitioned finds — bit-identical
+    fractions, same gain/slowdowns at 1e-9 (the `best_gain = 0` twin of
+    the `> 0` comparison discarded it before)."""
+    victim, aggressor = _negative_gain_pair()
+    part = evaluate_group_partitioned([victim, aggressor], TPU_V5E)
+    sched = cold([victim, aggressor])
+    sched.plan()
+    (price,) = sched._pair.values()
+    slow_v, slow_a, gain, meets, f_v, f_a = price
+    assert meets, "pair cached as infeasible despite feasible partition"
+    assert f_v == part.slot_fraction["victim"]
+    assert f_a == part.slot_fraction["aggressor"]
+    assert gain == pytest.approx(part.throughput_gain, rel=TOL, abs=TOL)
+    assert slow_v == pytest.approx(part.predicted_slowdown["victim"],
+                                   rel=TOL, abs=TOL)
+    assert slow_a == pytest.approx(part.predicted_slowdown["aggressor"],
+                                   rel=TOL, abs=TOL)
+
+
+# ------------------------------------------------------------------ #
+#  Scheduler integration invariants                                   #
+# ------------------------------------------------------------------ #
+def _assert_plans_match(got, want):
+    assert [p.workloads for p in got.placements] == \
+        [p.workloads for p in want.placements]
+    assert got.solo == want.solo
+    for g, w in zip(got.placements, want.placements):
+        assert g.slot_fraction == w.slot_fraction
+        assert abs(g.throughput_gain - w.throughput_gain) <= TOL
+
+
+def test_partitioned_group_fractions_sum_to_at_most_one():
+    """Every placement's fractions are a valid partition: each member's
+    share above the exclusion floor and the group total <= 1."""
+    mix = decode_heavy_mix(TPU_V5E)
+    for k in (2, 3, 4):
+        plan = cold(mix, k=k).plan()
+        for p in plan.placements:
+            if not p.slot_fraction:
+                continue
+            total = sum(p.slot_fraction.values())
+            assert total <= 1.0 + 1e-12, (k, p)
+            assert all(f > FRACTION_FLOOR for f in p.slot_fraction.values())
+            assert set(p.slot_fraction) == set(p.workloads)
+
+
+def test_kway_partitioned_groups_beat_fixed_grid_pairs():
+    """THE acceptance gate: on the SLO-tight decode-heavy mix, the k-way
+    scheduler with the default fraction search strictly beats the
+    legacy fixed-grid pair baseline in total gain, and does it with
+    partitioned groups of size > 2."""
+    mix = decode_heavy_mix(TPU_V5E)
+    baseline = cold(mix, k=2, search=LEGACY_SEARCH).plan()
+    kway = cold(mix, k=3).plan()
+    assert kway.total_gain > baseline.total_gain + 1e-6
+    grown = [p for p in kway.placements
+             if len(p.workloads) > 2 and p.slot_fraction]
+    assert grown, "no partitioned k-way group was placed"
+    for p in kway.placements:
+        assert p.meets_slo
+
+
+def test_partition_cache_roundtrips_through_remove_submit():
+    """Removing and re-submitting a member of a partitioned group must
+    re-price it to the identical partition (cache drop + lazy re-price,
+    not a stale or corrupted entry)."""
+    mix = decode_heavy_mix(TPU_V5E)
+    sched = cold(mix, k=3)
+    before = sched.plan()
+    target = next(p for p in before.placements
+                  if len(p.workloads) > 2 and p.slot_fraction)
+    member = target.workloads[0]
+    profile = next(w for w in mix if w.name == member)
+    sched.remove(member)
+    mid = sched.plan()
+    assert member not in {n for p in mid.placements for n in p.workloads}
+    sched.submit(profile)          # re-arrives at the END of the order
+    after = sched.plan()
+    reordered = [w for w in mix if w.name != member] + [profile]
+    _assert_plans_match(after, cold(reordered, k=3).plan())
+    # the member lands in a partitioned k-way group again, with the
+    # exact fractions/gain its group had before (the mix is symmetric)
+    regrown = next(p for p in after.placements if member in p.workloads)
+    assert len(regrown.workloads) > 2 and regrown.slot_fraction
+    assert regrown.throughput_gain == pytest.approx(
+        target.throughput_gain, rel=TOL, abs=TOL)
+    assert sorted(regrown.slot_fraction.values()) == pytest.approx(
+        sorted(target.slot_fraction.values()), rel=TOL, abs=TOL)
+
+
+def test_online_plan_with_partitioned_groups_matches_cold():
+    """Arrivals/departures over the SLO-tight mix: every online plan()
+    must equal a cold plan on the surviving set, including partitioned
+    k-way groups and their fractions."""
+    rng = np.random.default_rng(41)
+    pool = decode_heavy_mix(TPU_V5E) + random_workloads(rng, 6, TPU_V5E)
+    rng.shuffle(pool)
+    sched = ColocationScheduler(TPU_V5E, max_group_size=3)
+    resident = []
+    fresh = list(pool)
+    for _ in range(14):
+        if resident and rng.random() < 0.4:
+            victim = resident.pop(int(rng.integers(len(resident))))
+            sched.remove(victim.name)
+        else:
+            if not fresh:
+                break
+            w = fresh.pop()
+            resident.append(w)
+            sched.submit(w)
+        _assert_plans_match(sched.plan(), cold(resident, k=3).plan())

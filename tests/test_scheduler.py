@@ -12,33 +12,54 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "benchmarks"))
 import _seed_reference as seed  # noqa: E402
 from bench_planner import assert_plans_equal, random_workloads  # noqa: E402
 
-from repro.core import (TPU_V5E, ColocationScheduler, KernelProfile,  # noqa: E402
+from repro.core import (LEGACY_SEARCH, TPU_V5E, ColocationScheduler,  # noqa: E402
+                        FractionSearchConfig, KernelProfile,
                         WorkloadProfile, estimate, evaluate_group,
                         evaluate_group_partitioned, evaluate_pair,
                         evaluate_pair_partitioned, plan_colocation)
 from repro.core.resources import RESOURCE_AXES  # noqa: E402
+from repro.core.scheduler import _PARTITION_FRACTIONS  # noqa: E402
 
 TOL = 1e-9
 
 
-def cold(works, dev=TPU_V5E, k=2, allow_partition=True):
+def cold(works, dev=TPU_V5E, k=2, allow_partition=True, search=None):
     s = ColocationScheduler(dev, max_group_size=k,
-                            allow_partition=allow_partition)
+                            allow_partition=allow_partition,
+                            fraction_search=search)
     for w in works:
         s.submit(w)
     return s
 
 
 # ------------------------------------------------------------------ #
-#  k=2 reproduces the one-shot pairing exactly                        #
+#  k=2 + LEGACY_SEARCH reproduces the one-shot pairing exactly        #
+#  (the default search explores a richer fraction space — pinned      #
+#  separately to never place worse than the seed)                     #
 # ------------------------------------------------------------------ #
 @pytest.mark.parametrize("allow_partition", [True, False])
 def test_k2_cold_scheduler_matches_seed_planner(allow_partition):
     rng = np.random.default_rng(3)
     works = random_workloads(rng, 12, TPU_V5E)
-    got = cold(works, allow_partition=allow_partition).plan()
+    got = cold(works, allow_partition=allow_partition,
+               search=LEGACY_SEARCH).plan()
     want = seed.plan_colocation(works, TPU_V5E, allow_partition)
     assert_plans_equal(got, want)
+
+
+def test_default_search_never_places_worse_than_seed():
+    """The default (finer + refined) fraction search must dominate the
+    seed's fixed grid: every placement feasible, total gain >= the seed
+    planner's on the same pool (this draw places partitioned pairs)."""
+    rng = np.random.default_rng(3)
+    works = random_workloads(rng, 12, TPU_V5E)
+    got = cold(works).plan()
+    want = seed.plan_colocation(works, TPU_V5E, True)
+    assert all(p.meets_slo for p in got.placements)
+    seed_gain = (sum(p.throughput_gain for p in want.placements)
+                 + len(want.solo)) / max(
+        len(want.placements) + len(want.solo), 1)
+    assert got.total_gain >= seed_gain - TOL
 
 
 def test_plan_colocation_shim_warns_and_forwards():
@@ -46,7 +67,7 @@ def test_plan_colocation_shim_warns_and_forwards():
     works = random_workloads(rng, 10, TPU_V5E)
     with pytest.warns(DeprecationWarning, match="plan_colocation"):
         got = plan_colocation(works, TPU_V5E)
-    assert_plans_equal(got, cold(works).plan())
+    assert_plans_equal(got, cold(works, search=LEGACY_SEARCH).plan())
 
 
 def test_evaluate_pair_shims_warn_and_forward():
@@ -67,7 +88,9 @@ def test_evaluate_pair_shims_warn_and_forward():
 
     with pytest.warns(DeprecationWarning, match="evaluate_pair_partitioned"):
         gp = evaluate_pair_partitioned(a, b, TPU_V5E)
-    wp = evaluate_group_partitioned((a, b), TPU_V5E)
+    # the shim forwards the legacy first-member grid — bit-equal to both
+    # the explicit-fractions path and the seed implementation
+    wp = evaluate_group_partitioned((a, b), TPU_V5E, _PARTITION_FRACTIONS)
     sp = seed.evaluate_pair_partitioned(a, b, TPU_V5E)
     for other in (wp, sp):
         assert gp.slot_fraction == other.slot_fraction
@@ -110,9 +133,11 @@ def test_arrival_prices_one_row_departure_prices_nothing():
     sched.plan()
     arrival_scen = sched.stats["scenarios_solved"] - cold_scen
     # the new row: per pair, the arrival's kernels probe the resident's
-    # rep and vice versa (+ partition retries for SLO-failing pairs) —
-    # linear in n, far below the O(n^2) cold price
-    assert 0 < arrival_scen <= 16 * (n + 1)
+    # rep and vice versa, plus the fraction search's coarse grid (7
+    # vectors at the default 8 steps) and refinement level for every
+    # SLO-failing pair — a larger constant than the legacy 3-point
+    # grid, but still linear in n, far below the O(n^2) cold price
+    assert 0 < arrival_scen <= 40 * (n + 1)
     assert arrival_scen < cold_scen / 4
 
     before = sched.stats["scenarios_solved"]

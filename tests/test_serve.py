@@ -80,6 +80,61 @@ def test_chunked_prefill_reduces_decode_gap():
     assert aware_interleave > serial_interleave  # decode kept flowing
 
 
+def test_pick_chunk_prices_floor_chunk(monkeypatch):
+    """The halving ladder must include the 16-token floor as a PRICED
+    candidate (the old loop stopped above it), and the no-candidate-
+    passes fallback must be estimator-backed: the priced candidate with
+    the lowest predicted TBT, not an unpriced halving."""
+    import repro.serve.engine as engine_mod
+
+    eng = Engine(CFG, ecfg=EngineConfig(max_slots=2, max_len=96,
+                                        prefill_chunk=64,
+                                        tbt_slo_ms=1e-9))   # nothing passes
+    priced_chunks = []
+    real_solve = engine_mod.solve_scenarios
+
+    def spy(scenarios, dev=None):
+        priced_chunks.append(
+            [int(sc.background[0].name.removeprefix("prefill"))
+             for sc in scenarios])
+        return real_solve(scenarios, dev)
+
+    monkeypatch.setattr(engine_mod, "solve_scenarios", spy)
+    seq = Sequence(0, prompt_len=80, max_new=1)
+    chunk = eng._pick_chunk(seq, n_active_decodes=1)
+    assert priced_chunks and priced_chunks[-1] == [64, 32, 16]
+    # the estimator-backed fallback: with TBT monotone in chunk size the
+    # minimum predicted TBT is the floor chunk — and it was priced
+    assert chunk == 16
+
+    # with a sane SLO the largest passing candidate wins as before
+    eng.ecfg.tbt_slo_ms = 1e9
+    assert eng._pick_chunk(seq, n_active_decodes=1) == 64
+
+
+def test_pick_chunk_short_remainder_still_priced(monkeypatch):
+    """Prompts shorter than twice the floor used to skip pricing
+    entirely (empty candidate ladder); now the floor chunk is priced."""
+    import repro.serve.engine as engine_mod
+
+    eng = Engine(CFG, ecfg=EngineConfig(max_slots=2, max_len=96,
+                                        prefill_chunk=64))
+    priced = []
+    real_solve = engine_mod.solve_scenarios
+
+    def spy(scenarios, dev=None):
+        priced.append(
+            [int(sc.background[0].name.removeprefix("prefill"))
+             for sc in scenarios])
+        return real_solve(scenarios, dev)
+
+    monkeypatch.setattr(engine_mod, "solve_scenarios", spy)
+    seq = Sequence(0, prompt_len=20, max_new=1)
+    chunk = eng._pick_chunk(seq, n_active_decodes=1)
+    assert priced == [[20, 16]]  # the floor chunk was estimator-priced
+    assert chunk in (20, 16)
+
+
 def test_slot_allocator():
     a = SlotAllocator(n_slots=2, max_len=32)
     s1 = Sequence(1, prompt_len=8, max_new=4)
