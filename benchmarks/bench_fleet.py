@@ -1,0 +1,256 @@
+"""Fleet recovery gate: deterministic fault injection over FleetScheduler.
+
+Replays fixed traces (virtual clock, no sleeps — bit-identical every
+run) against a ``FleetScheduler`` and gates the robustness claims:
+
+  1. recovery: after an injected device kill, 100% of SLO workloads are
+     re-placed on the survivors; every displaced best-effort workload
+     has an explicit "evicted" decision; the fleet never raises out of
+     the event loop (stats["errors"] == 0); and the post-recovery online
+     fleet plan equals a cold ``FleetScheduler`` plan over the surviving
+     devices/workloads at 1e-9 (placements, slowdowns, fractions, gain);
+  2. admission: an arrival storm against a bounded queue rejects the
+     overflow with explicit decision records and the tracked pool stays
+     bounded — no silent unbounded growth;
+  3. straggler: a slow device degrades via the EWMA monitor; SLO work
+     migrates off it while best-effort may remain.
+
+`--quick` (the CI smoke) runs the same traces — they are already small —
+and writes BENCH_fleet.json (recovery latency, evictions, SLO
+re-placement rate, online==cold) as a CI artifact next to
+BENCH_planner.json.
+
+  PYTHONPATH=src python benchmarks/bench_fleet.py          # full gates
+  PYTHONPATH=src python benchmarks/bench_fleet.py --quick  # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from bench_planner import decode_heavy_mix
+from repro.core import TPU_V5E, BEST_EFFORT, SLO, FleetConfig, FleetScheduler
+from repro.ft.inject import FakeClock, FaultInjector, arrive, kill, slow, storm
+
+TOL = 1e-9
+
+
+def fleet_plans_equal(got, want, tol=TOL):
+    """FleetPlan equality at tol: same placements (members in order),
+    slot fractions, predicted slowdowns, and gains; same UNPLACED set
+    (queued + degraded pooled — the queued/degraded split is retry
+    history, which a cold fleet by definition does not have)."""
+    if set(got.placements) != set(want.placements):
+        return False
+    for did, a in got.placements.items():
+        b = want.placements[did]
+        if a.workloads != b.workloads or set(a.slot_fraction) != set(b.slot_fraction):
+            return False
+        if any(abs(a.slot_fraction[n] - b.slot_fraction[n]) > tol
+               for n in a.slot_fraction):
+            return False
+        if any(abs(a.predicted_slowdown[n] - b.predicted_slowdown[n]) > tol
+               for n in a.workloads):
+            return False
+        if abs(a.throughput_gain - b.throughput_gain) > tol:
+            return False
+    return (sorted(got.queued + got.degraded)
+            == sorted(want.queued + want.degraded))
+
+
+def cold_fleet(online, dev_models, config):
+    """Cold FleetScheduler over the given devices, fed the online
+    fleet's tracked pool in arrival order (the recovery-gate contract)."""
+    fleet = FleetScheduler(dev_models, config)
+    for prof, prio in online.workloads:
+        fleet.submit(prof, priority=prio)
+    return fleet
+
+
+# ------------------------------------------------------------------ #
+def bench_recovery(dev):
+    """The fixed device-kill trace: 4 devices, 4 SLO decodes + 6
+    best-effort auxes (10 workloads, 12 slots), kill dev1 at t=8 —
+    9 surviving slots force best-effort evictions while every SLO
+    workload must re-place."""
+    cfg = FleetConfig(max_group_size=3, heartbeat_timeout=3.0,
+                      backoff_base=1.0, max_retries=3)
+    works = decode_heavy_mix(dev, n_decode=4, n_aux=6)
+    decodes, auxes = works[:4], works[4:]
+    clock = FakeClock()
+    models = {f"dev{i}": dev for i in range(4)}
+    fleet = FleetScheduler(models, cfg, clock=clock)
+    kill_t = 8.0
+    trace = ([arrive(float(i), d, priority=SLO)
+              for i, d in enumerate(decodes)]
+             + storm(4.0, auxes, priority=BEST_EFFORT)
+             + [kill(kill_t, "dev1")])
+    FaultInjector(fleet, clock).run(trace, until=30.0)
+
+    plan = fleet.plan()
+    slo_names = [w.name for w in decodes]
+    slo_rate = plan.placement_rate(slo_names)
+    pre_kill_placed = {d.workload for d in fleet.decisions
+                      if d.time <= kill_t and d.action == "placed"}
+    evicted = [d for d in fleet.decisions if d.action == "evicted"]
+    placed_now = plan.placed
+    # every best-effort workload that lost its pre-kill placement for
+    # good must have an explicit eviction record
+    displaced_be = [w.name for w in auxes
+                    if w.name in pre_kill_placed and w.name not in placed_now]
+    evicted_names = {d.workload for d in evicted}
+    evictions_recorded = all(n in evicted_names for n in displaced_be)
+
+    dead_t = next(d.time for d in fleet.decisions
+                  if d.action == "device-dead")
+    slo_recovered_t = max(
+        (d.time for d in fleet.decisions
+         if d.time >= dead_t and d.workload in slo_names
+         and d.action in ("placed", "migrated")), default=dead_t)
+    recovery_latency = slo_recovered_t - kill_t
+
+    survivors = {did: m for did, m in models.items() if did != "dev1"}
+    cold = cold_fleet(fleet, survivors, cfg)
+    online_eq_cold = fleet_plans_equal(plan, cold.plan())
+
+    res = {
+        "slo_replacement_rate": slo_rate,
+        "evictions": len(evicted),
+        "evictions_recorded": bool(evictions_recorded),
+        "recovery_latency_s": recovery_latency,
+        "event_loop_errors": fleet.stats["errors"],
+        "online_equals_cold": bool(online_eq_cold),
+        "migrations": fleet.stats["migrated"],
+        "replans": fleet.stats["replans"],
+        "scenarios_solved": fleet.stats["scenarios_solved"],
+        "decisions": len(fleet.decisions),
+    }
+    res["pass"] = bool(slo_rate == 1.0 and evictions_recorded
+                       and len(evicted) >= 1
+                       and fleet.stats["errors"] == 0 and online_eq_cold)
+    return res
+
+
+def bench_admission(dev):
+    """Arrival storm vs a bounded queue: one device, queue_limit=2, a
+    storm of 8 best-effort workloads on one tick — the overflow must be
+    rejected with decision records and the tracked pool stays bounded."""
+    cfg = FleetConfig(max_group_size=2, queue_limit=2,
+                      heartbeat_timeout=3.0)
+    works = decode_heavy_mix(dev, n_decode=2, n_aux=8)
+    decodes, auxes = works[:2], works[2:]
+    clock = FakeClock()
+    fleet = FleetScheduler({"dev0": dev}, cfg, clock=clock)
+    trace = ([arrive(0.0, d, priority=SLO) for d in decodes]
+             + storm(1.0, auxes, priority=BEST_EFFORT))
+    FaultInjector(fleet, clock).run(trace, until=5.0)
+    rejected = [d for d in fleet.decisions if d.action == "rejected"]
+    tracked = len(fleet)
+    bound = 2 * cfg.max_group_size + 2 * cfg.queue_limit  # placed + queues
+    res = {
+        "storm_size": len(auxes),
+        "rejected": len(rejected),
+        "tracked_after_storm": tracked,
+        "tracked_bound": bound,
+        "event_loop_errors": fleet.stats["errors"],
+    }
+    res["pass"] = bool(len(rejected) >= 1 and tracked <= bound
+                       and fleet.stats["errors"] == 0)
+    return res
+
+
+def bench_straggler(dev):
+    """A slow device degrades via the EWMA monitor: SLO work must leave
+    it; best-effort may stay (degraded devices still take best-effort)."""
+    cfg = FleetConfig(max_group_size=3, heartbeat_timeout=3.0)
+    works = decode_heavy_mix(dev, n_decode=2, n_aux=2)
+    decodes, auxes = works[:2], works[2:]
+    clock = FakeClock()
+    fleet = FleetScheduler({"dev0": dev, "dev1": dev}, cfg, clock=clock)
+    trace = ([arrive(float(i), d, priority=SLO)
+              for i, d in enumerate(decodes)]
+             + [arrive(2.0, a, priority=BEST_EFFORT) for a in auxes]
+             + [slow(4.0, "dev1")])
+    FaultInjector(fleet, clock).run(trace, until=10.0)
+    plan = fleet.plan()
+    slo_on_degraded = [n for n in (w.name for w in decodes)
+                       if plan.placed.get(n) == "dev1"]
+    res = {
+        "device_states": plan.device_states,
+        "slo_replacement_rate": plan.placement_rate(
+            [w.name for w in decodes]),
+        "slo_on_degraded_device": slo_on_degraded,
+        "event_loop_errors": fleet.stats["errors"],
+    }
+    res["pass"] = bool(plan.device_states["dev1"] == "degraded"
+                       and not slo_on_degraded
+                       and res["slo_replacement_rate"] == 1.0
+                       and fleet.stats["errors"] == 0)
+    return res
+
+
+# ------------------------------------------------------------------ #
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: same deterministic traces; writes "
+                         "BENCH_fleet.json unless --json overrides it")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write a machine-readable result summary to this "
+                         "path (implied as BENCH_fleet.json by --quick)")
+    args = ap.parse_args(argv)
+    dev = TPU_V5E
+
+    print("== recovery (device kill) ==")
+    recovery = bench_recovery(dev)
+    print(f"  SLO re-placement rate: {recovery['slo_replacement_rate']:.0%}")
+    print(f"  evictions: {recovery['evictions']} "
+          f"(all recorded: {recovery['evictions_recorded']})")
+    print(f"  recovery latency: {recovery['recovery_latency_s']:.1f}s "
+          f"virtual (kill -> all SLO re-placed)")
+    print(f"  online == cold over survivors @1e-9: "
+          f"{recovery['online_equals_cold']}")
+    print(f"  event-loop errors: {recovery['event_loop_errors']}")
+
+    print("== admission (arrival storm) ==")
+    admission = bench_admission(dev)
+    print(f"  storm of {admission['storm_size']}: "
+          f"{admission['rejected']} rejected with records, "
+          f"{admission['tracked_after_storm']} tracked "
+          f"(bound {admission['tracked_bound']})")
+
+    print("== straggler (slow device) ==")
+    straggler = bench_straggler(dev)
+    print(f"  device states: {straggler['device_states']}")
+    print(f"  SLO on degraded device: "
+          f"{straggler['slo_on_degraded_device'] or 'none'}")
+
+    print("\n== acceptance ==")
+    for name, r in (("recovery", recovery), ("admission", admission),
+                    ("straggler", straggler)):
+        print(f"  {name}: {'PASS' if r['pass'] else 'FAIL'}")
+    ok = recovery["pass"] and admission["pass"] and straggler["pass"]
+
+    json_path = args.json or ("BENCH_fleet.json" if args.quick else None)
+    if json_path:
+        payload = {
+            "recovery": recovery,
+            "admission": admission,
+            "straggler": straggler,
+            "acceptance": {"recovery": recovery["pass"],
+                           "admission": admission["pass"],
+                           "straggler": straggler["pass"],
+                           "all": ok},
+        }
+        Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
+        print(f"\n  wrote {json_path}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -19,3 +19,5 @@ from repro.core.scheduler import (ColocationScheduler, Plan, Placement,  # noqa:
                                   evaluate_group, evaluate_group_partitioned,
                                   evaluate_pair, evaluate_pair_partitioned,
                                   plan_colocation)
+from repro.core.fleet import (BEST_EFFORT, SLO, AdmissionDecision,  # noqa: F401
+                              FleetConfig, FleetPlan, FleetScheduler)

@@ -394,13 +394,45 @@ class ColocationScheduler:
         other price stays valid (a pair's slowdown is independent of the
         rest of the pool), so the survivors of its group re-enter the
         pool with zero pairwise re-pricing (k>2 replays may price fresh
-        group combinations on the next plan)."""
+        group combinations on the next plan).
+
+        Removing an unknown name raises ``KeyError`` BEFORE any state is
+        touched — the pool, the pricing cache, and the next ``plan()``
+        are exactly what they were (pinned online==cold by tests)."""
         if name not in self._works:
             raise KeyError(f"unknown workload: {name!r}")
         uid = self._uid.pop(name)
         del self._works[name]
         self._drop_prices(uid)
         self.stats["departures"] += 1
+
+    def drain(self) -> List[WorkloadProfile]:
+        """Retire EVERY workload at once and return them in arrival
+        order — the fleet-migration hook: when a device dies or is
+        decommissioned, its scheduler drains and the returned pool is
+        re-placed on the survivors (repro.core.fleet).  All cached
+        prices are dropped; the scheduler is reusable afterwards (a
+        later submit starts a fresh pool)."""
+        pool = list(self._works.values())
+        self._works.clear()
+        self._uid.clear()
+        self._pair.clear()
+        self._group.clear()
+        self._reps.clear()
+        self.stats["departures"] += len(pool)
+        return pool
+
+    def snapshot(self) -> Dict:
+        """Read-only state summary (fleet telemetry / debugging): the
+        resident pool in arrival order, cache occupancy, and a copy of
+        the stats counters.  Never triggers pricing."""
+        return {
+            "workloads": [w.name for w in self._works.values()],
+            "cached_pairs": len(self._pair),
+            "cached_groups": len(self._group),
+            "max_group_size": self.max_group_size,
+            "stats": dict(self.stats),
+        }
 
     def _drop_prices(self, uid: int) -> None:
         self._reps.pop(uid, None)

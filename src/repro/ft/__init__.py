@@ -16,14 +16,22 @@ from typing import Callable, Dict, List, Optional
 
 class StragglerMonitor:
     """EWMA step-time watchdog (synchronous-SPMD straggler mitigation:
-    detect, log, and trigger a rebalance/replace hook)."""
+    detect, log, and trigger a rebalance/replace hook).
+
+    ``clock`` stamps detection events; it defaults to ``time.monotonic``
+    (wall-clock ``time.time`` would let NTP jumps skew event timelines)
+    and is injectable so tests and the fault-injection harness
+    (repro.ft.inject) run on a deterministic virtual clock.
+    """
 
     def __init__(self, factor: float = 3.0, alpha: float = 0.2,
-                 warmup: int = 3, on_straggle: Optional[Callable] = None):
+                 warmup: int = 3, on_straggle: Optional[Callable] = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.factor = factor
         self.alpha = alpha
         self.warmup = warmup
         self.on_straggle = on_straggle
+        self.clock = clock
         self.ewma: Optional[float] = None
         self.n = 0
         self.events: List[Dict] = []
@@ -36,7 +44,7 @@ class StragglerMonitor:
         straggling = (self.n > self.warmup and dt > self.factor * self.ewma)
         if straggling:
             self.events.append({"step": step, "dt": dt, "ewma": self.ewma,
-                                "time": time.time()})
+                                "time": self.clock()})
             if self.on_straggle:
                 self.on_straggle(step, dt, self.ewma)
         else:
@@ -52,17 +60,33 @@ class Heartbeat:
 
 
 class HeartbeatTracker:
-    """Failure detection across workers (hosts report; controller scans)."""
+    """Failure detection across workers (hosts report; controller scans).
 
-    def __init__(self, timeout_s: float = 60.0):
+    Timeout math runs on ``clock`` — ``time.monotonic`` by default, so an
+    NTP step on the controller can never mass-declare workers dead — and
+    the clock is injectable (tests / repro.ft.inject pass a virtual
+    clock, so no test ever sleeps).  An explicit ``now`` always wins,
+    including ``now=0.0`` (the old ``now or time.time()`` treated a zero
+    timestamp as "unset").
+    """
+
+    def __init__(self, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
         self.timeout = timeout_s
+        self.clock = clock
         self.beats: Dict[str, Heartbeat] = {}
 
     def beat(self, worker: str, now: Optional[float] = None):
-        self.beats[worker] = Heartbeat(worker, now or time.time())
+        self.beats[worker] = Heartbeat(
+            worker, self.clock() if now is None else now)
+
+    def forget(self, worker: str) -> None:
+        """Stop tracking a worker (it was drained/decommissioned, not
+        lost): it must no longer show up in ``dead_workers``."""
+        self.beats.pop(worker, None)
 
     def dead_workers(self, now: Optional[float] = None) -> List[str]:
-        now = now or time.time()
+        now = self.clock() if now is None else now
         return [w for w, h in self.beats.items()
                 if now - h.last_seen > self.timeout]
 

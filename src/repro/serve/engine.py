@@ -48,7 +48,8 @@ class EngineConfig:
 
 @dataclass
 class StepEvent:
-    kind: str                  # "decode" | "prefill_chunk" | "admit" | "finish"
+    kind: str                  # "decode" | "prefill_chunk" | "admit" |
+                               # "finish" | "degraded" | "recovered"
     t: float
     detail: dict = field(default_factory=dict)
 
@@ -75,7 +76,20 @@ class Engine:
         self.events: List[StepEvent] = []
         self.metrics: Dict[int, dict] = {}
         self._next_id = 0
+        self.degraded = False
         self._build_steps()
+
+    def set_degraded(self, flag: bool, reason: str = "") -> None:
+        """Fleet hook: the engine's device is oversubscribed (straggling,
+        or absorbing migrated work after a fleet failure).  In degraded
+        mode the chunk scheduler stops spending headroom on large prefill
+        chunks and always takes the minimum-predicted-TBT candidate —
+        prefills slow down, decode TBT is protected."""
+        if flag != self.degraded:
+            self.degraded = flag
+            self.events.append(StepEvent(
+                "degraded" if flag else "recovered",
+                time.perf_counter(), {"reason": reason}))
 
     # ------------------------------------------------------------- #
     def _build_steps(self):
@@ -132,14 +146,21 @@ class Engine:
         chunk's interference, plus the chunk itself serialized on the core
         it is interleaved with.  When no candidate passes, the fallback is
         estimator-backed too: the priced candidate with the lowest
-        predicted TBT."""
+        predicted TBT.
+
+        Degraded mode (``set_degraded``, driven by the fleet layer when
+        this device is oversubscribed): skip the largest-passing search
+        and always take the minimum-predicted-TBT candidate — the
+        interference budget belongs to the migrated/SLO work, not to
+        prefill throughput."""
         remaining = seq.prompt_len - seq.pos
         if self.ecfg.mode == "serial":
             return remaining
         if self.ecfg.mode == "fixed_chunk":
             return min(self.ecfg.prefill_chunk, remaining)
         if n_active_decodes == 0:
-            return min(self.ecfg.prefill_chunk * 4, remaining)
+            boost = 1 if self.degraded else 4
+            return min(self.ecfg.prefill_chunk * boost, remaining)
         chunk = min(self.ecfg.prefill_chunk, remaining)
         cands = []
         while chunk > _MIN_CHUNK:
@@ -153,6 +174,8 @@ class Engine:
         tbt_iso = decode.isolated_time(self.dev)
         t_chunk = np.asarray([ch.isolated_time(self.dev) for ch in chunks])
         tbt_pred = tbt_iso * br.slowdowns[:, 0] + t_chunk
+        if self.degraded:
+            return cands[int(np.argmin(tbt_pred))]
         ok = tbt_pred <= max(self.ecfg.tbt_slo_ms / 1e3, tbt_iso * 1.5)
         passing = np.flatnonzero(ok)
         if passing.size:

@@ -1,0 +1,313 @@
+"""FleetScheduler: admission control, priority eviction, device failure
+and recovery, retry/backoff into graceful degradation, and the recovery
+invariant — the online fleet state after any fault trace equals a cold
+FleetScheduler plan over the surviving devices/workloads."""
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "benchmarks"))
+from bench_fleet import cold_fleet, fleet_plans_equal  # noqa: E402
+from bench_planner import decode_heavy_mix  # noqa: E402
+
+from repro.core import (BEST_EFFORT, SLO, TPU_V5E, FleetConfig,  # noqa: E402
+                        FleetScheduler)
+from repro.ft.inject import (FakeClock, FaultInjector, arrive,  # noqa: E402
+                             depart, kill, slow, storm)
+
+TOL = 1e-9
+
+
+def mix(n_decode=2, n_aux=2):
+    works = decode_heavy_mix(TPU_V5E, n_decode=n_decode, n_aux=n_aux)
+    return works[:n_decode], works[n_decode:]
+
+
+def make_fleet(n_devices=2, clock=None, **cfg_kw):
+    cfg_kw.setdefault("max_group_size", 3)
+    cfg_kw.setdefault("heartbeat_timeout", 3.0)
+    cfg = FleetConfig(**cfg_kw)
+    return FleetScheduler({f"dev{i}": TPU_V5E for i in range(n_devices)},
+                          cfg, clock=clock or FakeClock()), cfg
+
+
+# ------------------------------------------------------------------ #
+#  admission control                                                  #
+# ------------------------------------------------------------------ #
+def test_submit_places_and_records_decision():
+    decodes, _ = mix()
+    fleet, _ = make_fleet()
+    d = fleet.submit(decodes[0], priority=SLO)
+    assert d.action == "placed" and d.workload == decodes[0].name
+    assert d.device in fleet.devices
+    assert fleet.plan().placed == {decodes[0].name: d.device}
+
+
+def test_submit_rejects_bad_priority():
+    decodes, _ = mix()
+    fleet, _ = make_fleet()
+    with pytest.raises(ValueError):
+        fleet.submit(decodes[0], priority="urgent")
+    assert len(fleet) == 0
+
+
+def test_remove_unknown_raises_before_mutation():
+    fleet, _ = make_fleet()
+    with pytest.raises(KeyError):
+        fleet.remove("ghost")
+    assert fleet.stats["departures"] == 0 and len(fleet.decisions) == 0
+
+
+def test_storm_bounded_queue_rejects_with_records():
+    decodes, auxes = mix(n_decode=1, n_aux=8)
+    clock = FakeClock()
+    fleet, cfg = make_fleet(n_devices=1, clock=clock, max_group_size=2,
+                            queue_limit=2)
+    fleet.submit(decodes[0], priority=SLO)
+    results = [fleet.submit(a, priority=BEST_EFFORT) for a in auxes]
+    actions = [r.action for r in results]
+    rejected = [r for r in results if r.action == "rejected"]
+    assert rejected, "overflow must be rejected, not grown"
+    # rejected workloads are NOT tracked: the pool stays bounded
+    assert len(fleet) <= 1 + cfg.max_group_size + cfg.queue_limit + 1
+    for r in rejected:
+        assert r.workload not in fleet
+        assert "queue full" in r.reason
+    # everything admitted got an explicit decision
+    assert all(a in ("placed", "queued", "rejected") for a in actions)
+
+
+# ------------------------------------------------------------------ #
+#  priority eviction                                                  #
+# ------------------------------------------------------------------ #
+def test_slo_arrival_evicts_best_effort():
+    """One device, full of best-effort work: an SLO arrival must take
+    the capacity, with an explicit eviction record for the displaced
+    best-effort workload."""
+    decodes, auxes = mix(n_decode=1, n_aux=2)
+    fleet, _ = make_fleet(n_devices=1, max_group_size=2)
+    for a in auxes:
+        assert fleet.submit(a, priority=BEST_EFFORT).action == "placed"
+    d = fleet.submit(decodes[0], priority=SLO)
+    assert d.action == "placed"
+    plan = fleet.plan()
+    assert plan.placed[decodes[0].name] == "dev0"
+    evicted = [x for x in fleet.decisions if x.action == "evicted"]
+    assert len(evicted) == 1
+    assert evicted[0].workload in {a.name for a in auxes}
+    assert evicted[0].priority == BEST_EFFORT
+    # the evicted workload stays tracked (queued), never silently dropped
+    assert evicted[0].workload in fleet
+    assert fleet.workload_state(evicted[0].workload)["state"] == "queued"
+
+
+def test_evicted_work_returns_when_capacity_does():
+    decodes, auxes = mix(n_decode=1, n_aux=2)
+    fleet, _ = make_fleet(n_devices=1, max_group_size=2)
+    for a in auxes:
+        fleet.submit(a, priority=BEST_EFFORT)
+    fleet.submit(decodes[0], priority=SLO)
+    evicted = next(x.workload for x in fleet.decisions
+                   if x.action == "evicted")
+    fleet.remove(decodes[0].name)            # SLO departs
+    assert fleet.plan().placed.get(evicted) == "dev0"
+
+
+# ------------------------------------------------------------------ #
+#  device failure / recovery                                          #
+# ------------------------------------------------------------------ #
+def _run_kill_trace(n_devices=3, n_decode=3, n_aux=2, until=25.0):
+    decodes, auxes = mix(n_decode=n_decode, n_aux=n_aux)
+    clock = FakeClock()
+    fleet, cfg = make_fleet(n_devices=n_devices, clock=clock)
+    trace = ([arrive(float(i), d, priority=SLO)
+              for i, d in enumerate(decodes)]
+             + storm(3.0, auxes, priority=BEST_EFFORT)
+             + [kill(6.0, "dev1")])
+    FaultInjector(fleet, clock).run(trace, until=until)
+    return fleet, cfg, decodes, auxes
+
+
+def test_device_kill_replaces_all_slo_work():
+    fleet, _, decodes, _ = _run_kill_trace()
+    plan = fleet.plan()
+    assert plan.device_states["dev1"] == "dead"
+    assert plan.placement_rate([d.name for d in decodes]) == 1.0
+    assert all(did != "dev1" for did in plan.placed.values())
+    assert fleet.stats["errors"] == 0
+    assert any(d.action == "device-dead" for d in fleet.decisions)
+
+
+def test_dead_device_scheduler_is_drained():
+    fleet, _, _, _ = _run_kill_trace()
+    dev = fleet.devices["dev1"]
+    assert len(dev.sched) == 0 and dev.resident_uids == {}
+    snap = dev.sched.snapshot()
+    assert snap["workloads"] == [] and snap["cached_pairs"] == 0
+
+
+def test_online_after_kill_equals_cold_over_survivors():
+    fleet, cfg, _, _ = _run_kill_trace()
+    survivors = {did: d.model for did, d in fleet.devices.items()
+                 if did != "dev1"}
+    cold = cold_fleet(fleet, survivors, cfg)
+    assert fleet_plans_equal(fleet.plan(), cold.plan(), tol=TOL)
+
+
+def test_heartbeat_revives_dead_device():
+    fleet, _, decodes, auxes = _run_kill_trace()
+    fleet.heartbeat("dev1")
+    plan = fleet.plan()
+    assert plan.device_states["dev1"] == "healthy"
+    assert any(d.action == "device-recovered" for d in fleet.decisions)
+    # with capacity back, everything places again
+    assert plan.placement_rate(
+        [w.name for w in decodes + auxes if w.name in fleet]) == 1.0
+
+
+def test_retry_backoff_ends_in_degraded_not_crash():
+    """More SLO work than the fleet can hold: retries back off
+    exponentially and end in a final degraded state — tracked, recorded,
+    no exception out of the event loop."""
+    decodes, _ = mix(n_decode=3, n_aux=0)
+    clock = FakeClock()
+    fleet, cfg = make_fleet(n_devices=1, clock=clock, max_group_size=2,
+                            backoff_base=1.0, max_retries=2)
+    trace = [arrive(0.0, d, priority=SLO) for d in decodes]
+    FaultInjector(fleet, clock).run(trace, until=20.0)
+    plan = fleet.plan()
+    assert len(plan.degraded) >= 1
+    for name in plan.degraded:
+        assert fleet.workload_state(name)["retries"] >= cfg.max_retries
+    retries = [d for d in fleet.decisions if d.action == "retry-failed"]
+    # exponential backoff is visible in the decision reasons
+    assert any("backoff 2.0s" in d.reason for d in retries)
+    assert fleet.stats["errors"] == 0
+    assert fleet.degraded
+
+
+def test_degraded_workload_recovers_on_capacity_change():
+    decodes, _ = mix(n_decode=3, n_aux=0)
+    clock = FakeClock()
+    fleet, _ = make_fleet(n_devices=1, clock=clock, max_group_size=2,
+                          backoff_base=1.0, max_retries=2)
+    FaultInjector(fleet, clock).run(
+        [arrive(0.0, d, priority=SLO) for d in decodes], until=20.0)
+    stuck = fleet.plan().degraded
+    assert stuck
+    fleet.add_device("dev1", TPU_V5E)
+    fleet.tick()
+    assert fleet.plan().degraded == []
+    assert fleet.plan().placement_rate(stuck) == 1.0
+
+
+def test_straggling_device_degrades_and_sheds_slo_work():
+    decodes, auxes = mix(n_decode=2, n_aux=2)
+    clock = FakeClock()
+    fleet, _ = make_fleet(n_devices=2, clock=clock)
+    trace = ([arrive(float(i), d, priority=SLO)
+              for i, d in enumerate(decodes)]
+             + [arrive(2.0, a, priority=BEST_EFFORT) for a in auxes]
+             + [slow(4.0, "dev1")])
+    FaultInjector(fleet, clock).run(trace, until=10.0)
+    plan = fleet.plan()
+    assert plan.device_states["dev1"] == "degraded"
+    placed = plan.placed
+    for d in decodes:                        # SLO left the slow device
+        assert placed[d.name] == "dev0"
+    assert any(d.action == "device-degraded" for d in fleet.decisions)
+    # operator override clears it
+    fleet.revive_device("dev1")
+    assert fleet.plan().device_states["dev1"] == "healthy"
+
+
+def test_decommission_migrates_like_a_failure():
+    decodes, _ = mix(n_decode=2, n_aux=0)
+    fleet, cfg = make_fleet(n_devices=2)
+    for d in decodes:
+        fleet.submit(d, priority=SLO)
+    fleet.decommission("dev0")
+    plan = fleet.plan()
+    assert plan.device_states["dev0"] == "dead"
+    assert plan.placement_rate([d.name for d in decodes]) == 1.0
+    fleet.decommission("dev0")               # documented no-op
+    survivors = {"dev1": TPU_V5E}
+    assert fleet_plans_equal(fleet.plan(),
+                             cold_fleet(fleet, survivors, cfg).plan())
+
+
+def test_rescale_plan_attached_on_chip_loss():
+    decodes, _ = mix(n_decode=1, n_aux=0)
+    clock = FakeClock()
+    fleet, _ = make_fleet(n_devices=2, clock=clock)
+    meta = {"mesh_shape": {"data": 4, "model": 2}, "global_batch": 256,
+            "num_microbatches": 4, "step": 77}
+    d = fleet.submit(decodes[0], priority=SLO, train_meta=meta)
+    # chips=1 by default: decommission the hosting device
+    fleet.decommission(d.device)
+    state = fleet.workload_state(decodes[0].name)
+    assert state["rescale"] is not None
+    assert state["rescale"].restart_step == 77
+    assert state["rescale"].new_chip_count < 8
+    assert any(x.action == "rescale-planned" for x in fleet.decisions)
+
+
+# ------------------------------------------------------------------ #
+#  determinism + the no-crash contract                                #
+# ------------------------------------------------------------------ #
+def test_full_trace_online_equals_cold_and_decisions_deterministic():
+    """The bench gate's invariant, via the injector: arrivals, a storm,
+    a departure, and a kill — then the online plan equals a cold fleet
+    over the survivors, and a second identical run produces an identical
+    decision log."""
+    def run():
+        decodes, auxes = mix(n_decode=3, n_aux=3)
+        clock = FakeClock()
+        fleet, cfg = make_fleet(n_devices=3, clock=clock)
+        trace = ([arrive(float(i), d, priority=SLO)
+                  for i, d in enumerate(decodes)]
+                 + storm(3.0, auxes, priority=BEST_EFFORT)
+                 + [depart(5.0, auxes[0].name), kill(7.0, "dev2")])
+        FaultInjector(fleet, clock).run(trace, until=30.0)
+        return fleet, cfg
+
+    fleet, cfg = run()
+    survivors = {did: d.model for did, d in fleet.devices.items()
+                 if d.state != "dead"}
+    assert fleet_plans_equal(fleet.plan(),
+                             cold_fleet(fleet, survivors, cfg).plan(),
+                             tol=TOL)
+    fleet2, _ = run()
+    assert [repr(d) for d in fleet.decisions] \
+        == [repr(d) for d in fleet2.decisions]
+    assert fleet.stats == fleet2.stats
+
+
+def test_event_loop_never_raises():
+    """tick() seals internal failures into error decisions."""
+    decodes, _ = mix(n_decode=1, n_aux=0)
+    fleet, _ = make_fleet(n_devices=1)
+    fleet.submit(decodes[0], priority=SLO)
+
+    def boom():
+        raise RuntimeError("injected bug")
+
+    fleet._replay = boom
+    fleet.tick(now=1e9)                      # forces a dead-device replan
+    errors = [d for d in fleet.decisions if d.action == "error"]
+    assert errors and fleet.stats["errors"] >= 1
+    assert "injected bug" in errors[-1].reason
+
+
+def test_snapshot_reports_fleet_telemetry():
+    decodes, auxes = mix()
+    fleet, _ = make_fleet(n_devices=2)
+    fleet.submit(decodes[0], priority=SLO)
+    fleet.submit(auxes[0], priority=BEST_EFFORT)
+    snap = fleet.snapshot()
+    assert set(snap["devices"]) == {"dev0", "dev1"}
+    for d in snap["devices"].values():
+        assert {"state", "model", "chips", "sched"} <= set(d)
+    assert set(snap["workloads"]) == {decodes[0].name, auxes[0].name}
+    assert snap["stats"]["arrivals"] == 2

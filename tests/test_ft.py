@@ -1,0 +1,132 @@
+"""repro.ft primitives: StragglerMonitor EWMA detection/warmup,
+HeartbeatTracker timeout math on injected clocks, plan_rescale chip
+accounting, and the FakeClock the fault-injection harness runs on."""
+import pytest
+
+from repro.ft import HeartbeatTracker, StragglerMonitor, plan_rescale
+from repro.ft.inject import FakeClock
+
+
+# ------------------------------------------------------------------ #
+#  StragglerMonitor                                                   #
+# ------------------------------------------------------------------ #
+def test_straggler_warmup_suppresses_detection():
+    mon = StragglerMonitor(factor=3.0, warmup=3, clock=FakeClock())
+    # the first observation only seeds the EWMA; through the warmup even
+    # a huge outlier must not trip detection
+    assert mon.observe(0, 1.0) is False
+    assert mon.observe(1, 100.0) is False
+    assert mon.observe(2, 1.0) is False
+    assert mon.events == []
+
+
+def test_straggler_detects_after_warmup_and_stamps_clock():
+    clock = FakeClock(start=7.0)
+    hits = []
+    mon = StragglerMonitor(factor=3.0, alpha=0.2, warmup=3,
+                           on_straggle=lambda *a: hits.append(a),
+                           clock=clock)
+    for i in range(4):
+        assert mon.observe(i, 1.0) is False
+    clock.advance(5.0)
+    assert mon.observe(4, 10.0) is True
+    assert len(mon.events) == 1 and len(hits) == 1
+    assert mon.events[0]["time"] == 12.0        # the injected clock, not wall
+    assert mon.events[0]["step"] == 4
+
+
+def test_straggler_outliers_do_not_poison_ewma():
+    mon = StragglerMonitor(factor=3.0, warmup=1, clock=FakeClock())
+    for i in range(3):
+        mon.observe(i, 1.0)
+    ewma_before = mon.ewma
+    assert mon.observe(3, 50.0) is True
+    # straggling steps must not drag the healthy baseline up
+    assert mon.ewma == ewma_before
+    # healthy steps keep updating it
+    mon.observe(4, 2.0)
+    assert mon.ewma == pytest.approx(0.8 * ewma_before + 0.2 * 2.0)
+
+
+# ------------------------------------------------------------------ #
+#  HeartbeatTracker                                                   #
+# ------------------------------------------------------------------ #
+def test_heartbeat_dead_workers_on_injected_clock():
+    clock = FakeClock()
+    hb = HeartbeatTracker(timeout_s=5.0, clock=clock)
+    hb.beat("w0")
+    hb.beat("w1")
+    clock.advance(4.0)
+    hb.beat("w1")                     # w1 refreshes, w0 goes stale
+    assert hb.dead_workers() == []    # 4.0 < timeout for both
+    clock.advance(2.0)                # w0 at 6.0, w1 at 2.0
+    assert hb.dead_workers() == ["w0"]
+    clock.advance(4.0)                # w1 at 6.0 too
+    assert sorted(hb.dead_workers()) == ["w0", "w1"]
+
+
+def test_heartbeat_explicit_now_zero_wins():
+    """Regression: ``now or clock()`` treated an explicit ``now=0.0`` as
+    unset and silently substituted the current clock."""
+    clock = FakeClock(start=100.0)
+    hb = HeartbeatTracker(timeout_s=5.0, clock=clock)
+    hb.beat("w0", now=0.0)
+    assert hb.beats["w0"].last_seen == 0.0
+    assert hb.dead_workers(now=0.0) == []
+    assert hb.dead_workers() == ["w0"]      # clock says 100.0: stale
+
+
+def test_heartbeat_forget_stops_tracking():
+    clock = FakeClock()
+    hb = HeartbeatTracker(timeout_s=1.0, clock=clock)
+    hb.beat("w0")
+    clock.advance(10.0)
+    hb.forget("w0")
+    assert hb.dead_workers() == []
+    hb.forget("never-seen")                  # idempotent no-op
+
+
+# ------------------------------------------------------------------ #
+#  plan_rescale                                                       #
+# ------------------------------------------------------------------ #
+def test_plan_rescale_sheds_data_axis():
+    plan = plan_rescale({"data": 4, "model": 2}, lost_chips=4,
+                        global_batch=256, num_microbatches=4,
+                        current_step=1234)
+    assert plan.new_shape == {"data": 2, "model": 2}
+    assert plan.new_chip_count == 4
+    # global batch is preserved via more gradient accumulation
+    assert plan.new_global_batch == 256
+    assert plan.new_microbatches == 8
+    assert plan.restart_step == 1234
+    assert plan.lr_scale == 1.0
+
+
+def test_plan_rescale_pod_fallback_when_data_exhausted():
+    plan = plan_rescale({"pod": 2, "data": 1, "model": 4}, lost_chips=1,
+                        global_batch=128, num_microbatches=2,
+                        current_step=7)
+    assert plan.new_shape == {"pod": 1, "data": 1, "model": 4}
+    assert plan.new_chip_count == 4
+    assert plan.new_microbatches == 4
+
+
+def test_plan_rescale_no_loss_is_identity():
+    plan = plan_rescale({"data": 4, "model": 2}, lost_chips=0,
+                        global_batch=64, num_microbatches=2,
+                        current_step=0)
+    assert plan.new_shape == {"data": 4, "model": 2}
+    assert plan.new_microbatches == 2
+
+
+# ------------------------------------------------------------------ #
+#  FakeClock                                                          #
+# ------------------------------------------------------------------ #
+def test_fake_clock_is_monotonic():
+    clock = FakeClock(start=1.5)
+    assert clock() == 1.5
+    assert clock.advance(0.5) == 2.0
+    assert clock() == 2.0
+    with pytest.raises(ValueError):
+        clock.advance(-0.1)
+    assert clock() == 2.0

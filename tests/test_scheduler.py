@@ -166,6 +166,61 @@ def test_departure_releases_group_survivors():
     assert "w0" not in placed | set(replan.solo)
 
 
+def test_remove_unknown_raises_and_leaves_state_intact():
+    """Removing a name never submitted (or already removed) raises a
+    clear KeyError BEFORE any mutation: the pool, the pricing cache, and
+    online==cold are exactly what they were."""
+    rng = np.random.default_rng(21)
+    works = random_workloads(rng, 8, TPU_V5E)
+    sched = cold(works)
+    sched.plan()
+    cache_before = (len(sched._pair), len(sched._group))
+    stats_before = dict(sched.stats)
+    with pytest.raises(KeyError):
+        sched.remove("never-submitted")
+    sched.remove(works[0].name)
+    with pytest.raises(KeyError):
+        sched.remove(works[0].name)          # double-remove: same error
+    assert len(sched._pair) <= cache_before[0]
+    assert len(sched._group) <= cache_before[1]
+    assert sched.stats["departures"] == stats_before["departures"] + 1
+    assert_plans_equal(sched.plan(), cold(works[1:]).plan())
+
+
+def test_double_submit_identical_profile_keeps_online_equal_cold():
+    """Re-submitting the SAME profile is the documented no-op-shaped
+    path (last-profile-wins): prices for that workload are invalidated
+    and re-derived, and the plan still equals a cold scheduler fed each
+    workload once."""
+    rng = np.random.default_rng(22)
+    works = random_workloads(rng, 8, TPU_V5E)
+    sched = cold(works)
+    sched.plan()
+    sched.submit(works[3])                   # exact duplicate
+    sched.submit(works[3])                   # and again
+    assert len(sched) == len(works)
+    assert_plans_equal(sched.plan(), cold(works).plan())
+
+
+def test_error_paths_then_churn_keep_online_equal_cold():
+    """After exercising every error/edge path — unknown remove, double
+    remove, duplicate submit — continued churn must still replay to the
+    cold plan (the pricing cache was never corrupted)."""
+    rng = np.random.default_rng(23)
+    works = random_workloads(rng, 10, TPU_V5E)
+    sched = cold(works[:8])
+    with pytest.raises(KeyError):
+        sched.remove(works[9].name)          # not yet submitted
+    sched.submit(works[5])                   # duplicate
+    sched.remove(works[2].name)
+    with pytest.raises(KeyError):
+        sched.remove(works[2].name)          # double remove
+    sched.submit(works[8])
+    sched.submit(works[9])
+    pool = [w for w in works if w.name != works[2].name]
+    assert_plans_equal(sched.plan(), cold(pool).plan())
+
+
 def test_resubmit_updates_profile_in_place():
     rng = np.random.default_rng(13)
     works = random_workloads(rng, 8, TPU_V5E)

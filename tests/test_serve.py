@@ -148,3 +148,27 @@ def test_slot_allocator():
     assert not a.can_admit(huge)        # never fits
     a.release(1)
     assert a.can_admit(s3)
+
+
+def test_pick_chunk_degraded_mode_is_conservative():
+    """Fleet hook: in degraded mode (device oversubscribed after a fleet
+    failure) the scheduler must stop taking the largest passing chunk
+    and always pick the minimum-predicted-TBT candidate; with TBT
+    monotone in chunk size that is the floor chunk. The idle-batch 4x
+    chunk boost is also disabled."""
+    eng = Engine(CFG, ecfg=EngineConfig(max_slots=2, max_len=96,
+                                        prefill_chunk=64,
+                                        tbt_slo_ms=1e9))   # everything passes
+    seq = Sequence(0, prompt_len=80, max_new=1)
+    assert eng._pick_chunk(seq, n_active_decodes=1) == 64
+    assert eng._pick_chunk(seq, n_active_decodes=0) == 80
+
+    eng.set_degraded(True, reason="fleet: dev oversubscribed")
+    assert eng._pick_chunk(seq, n_active_decodes=1) == 16
+    assert eng._pick_chunk(seq, n_active_decodes=0) == 64  # no 4x boost
+    assert eng.events[-1].kind == "degraded"
+
+    eng.set_degraded(False)
+    eng.set_degraded(False)            # idempotent: no duplicate event
+    assert eng._pick_chunk(seq, n_active_decodes=1) == 64
+    assert [e.kind for e in eng.events[-2:]] == ["degraded", "recovered"]
