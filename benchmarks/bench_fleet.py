@@ -139,7 +139,10 @@ def bench_recovery(dev):
 def bench_admission(dev):
     """Arrival storm vs a bounded queue: one device, queue_limit=2, a
     storm of 8 best-effort workloads on one tick — the overflow must be
-    rejected with decision records and the tracked pool stays bounded."""
+    rejected with decision records and the tracked pool stays bounded.
+    Also gates storm *batching*: the whole same-tick storm must be
+    admitted through ONE deduplicated replay (replans-per-storm == 1,
+    not one per arrival)."""
     cfg = FleetConfig(max_group_size=2, queue_limit=2,
                       heartbeat_timeout=3.0)
     works = decode_heavy_mix(dev, n_decode=2, n_aux=8)
@@ -148,7 +151,11 @@ def bench_admission(dev):
     fleet = FleetScheduler({"dev0": dev}, cfg, clock=clock)
     trace = ([arrive(0.0, d, priority=SLO) for d in decodes]
              + storm(1.0, auxes, priority=BEST_EFFORT))
-    FaultInjector(fleet, clock).run(trace, until=5.0)
+    replans_at = {}
+    def snap(f, now):
+        replans_at[now] = f.stats["replans"]
+    FaultInjector(fleet, clock, on_tick=snap).run(trace, until=5.0)
+    storm_replans = replans_at[1.0] - replans_at[0.0]
     rejected = [d for d in fleet.decisions if d.action == "rejected"]
     tracked = len(fleet)
     bound = 2 * cfg.max_group_size + 2 * cfg.queue_limit  # placed + queues
@@ -157,9 +164,11 @@ def bench_admission(dev):
         "rejected": len(rejected),
         "tracked_after_storm": tracked,
         "tracked_bound": bound,
+        "storm_replans": storm_replans,
         "event_loop_errors": fleet.stats["errors"],
     }
     res["pass"] = bool(len(rejected) >= 1 and tracked <= bound
+                       and storm_replans == 1
                        and fleet.stats["errors"] == 0)
     return res
 
@@ -223,6 +232,8 @@ def main(argv=None):
           f"{admission['rejected']} rejected with records, "
           f"{admission['tracked_after_storm']} tracked "
           f"(bound {admission['tracked_bound']})")
+    print(f"  replans for the storm: {admission['storm_replans']} "
+          f"(batched admission; was one per arrival)")
 
     print("== straggler (slow device) ==")
     straggler = bench_straggler(dev)

@@ -48,7 +48,8 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, List, Mapping, Optional, Tuple
+from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Tuple)
 
 from repro.core.estimator import solve_scenarios
 from repro.core.fracsearch import (FractionSearchConfig, group_metrics,
@@ -388,6 +389,85 @@ class FleetScheduler:
         return self._decide("queued", t,
                             reason=f"no feasible device; retry in "
                                    f"{self.cfg.backoff_base:.1f}s")
+
+    def submit_many(self, arrivals: Sequence) -> List[AdmissionDecision]:
+        """Admit a same-tick arrival storm in ONE deduplicated replay.
+
+        ``arrivals`` holds ``(workload, priority)`` or ``(workload,
+        priority, train_meta)`` tuples.  Semantically equivalent to
+        calling ``submit`` per item — queued workloads never occupy a
+        device, so registering every arrival first and replanning once
+        yields the same final placements and the same bounded-queue
+        admission outcomes — but it costs one replay (and one round of
+        group pricing) instead of one per arrival.  Duplicate names in
+        the batch collapse to the last profile (last-profile-wins, as
+        with re-submission).  Returns one decision per distinct name in
+        first-submission order.
+        """
+        items = []
+        for entry in arrivals:
+            workload, priority = entry[0], entry[1]
+            train_meta = entry[2] if len(entry) > 2 else None
+            if priority not in _PRIORITY_RANK:
+                raise ValueError(f"priority must be {SLO!r} or "
+                                 f"{BEST_EFFORT!r}, got {priority!r}")
+            items.append((workload, priority, train_meta))
+        if not items:
+            return []
+        order: List[str] = []
+        for workload, priority, train_meta in items:
+            name = workload.name
+            old = self._tracked.get(name)
+            if old is not None:
+                self._drop_prices(old.uid)
+                old.profile = workload
+                old.priority = priority
+                old.uid = self._next_uid
+                old.train_meta = train_meta if train_meta else old.train_meta
+            else:
+                self._tracked[name] = _Tracked(workload, priority,
+                                               self._next_uid,
+                                               pos=self._next_pos,
+                                               train_meta=train_meta)
+                self._next_pos += 1
+            self._next_uid += 1
+            self.stats["arrivals"] += 1
+            if name not in order:
+                order.append(name)
+        n0 = len(self.decisions)
+        self._replan(f"arrival storm ({len(order)} workloads)")
+        batch = set(order)
+        placed_dec: Dict[str, AdmissionDecision] = {}
+        for d in self.decisions[n0:]:
+            if d.workload in batch and d.action in ("placed", "migrated"):
+                placed_dec.setdefault(d.workload, d)
+        out: List[AdmissionDecision] = []
+        for name in order:
+            t = self._tracked[name]
+            if t.state == PLACED:
+                d = placed_dec.get(name)
+                out.append(d if d is not None else self._decide(
+                    "placed", t, device=t.device,
+                    reason=f"arrival {name} (placement unchanged)"))
+                continue
+            backlog = sum(1 for o in self._tracked.values()
+                          if o.state in (QUEUED, DEGRADED)
+                          and o.priority == t.priority)
+            if backlog > self.cfg.queue_limit:
+                del self._tracked[name]
+                self._drop_prices(t.uid)
+                self.stats["rejected"] += 1
+                out.append(self._decide(
+                    "rejected", t,
+                    reason=f"{t.priority} queue full "
+                           f"({self.cfg.queue_limit} waiting)"))
+                continue
+            t.next_retry = self.clock() + self.cfg.backoff_base
+            out.append(self._decide(
+                "queued", t,
+                reason=f"no feasible device; retry in "
+                       f"{self.cfg.backoff_base:.1f}s"))
+        return out
 
     def remove(self, name: str) -> None:
         """A workload departs.  Unknown names raise ``KeyError`` before

@@ -153,14 +153,36 @@ class FaultInjector:
     def run(self, trace: Sequence[InjectEvent], until: Optional[float] = None):
         """Run the trace to completion (plus ``until`` extra settle time —
         recovery needs ticks after the last scripted event: heartbeat
-        timeouts must elapse and retry backoffs must fire)."""
+        timeouts must elapse and retry backoffs must fire).
+
+        A contiguous run of 2+ due "arrive" events (an arrival storm) is
+        admitted through ``fleet.submit_many`` as ONE batched replay when
+        the fleet provides it, instead of replanning per arrival.
+        """
         pending = sorted(enumerate(trace), key=lambda it: (it[1].t, it[0]))
         pending = [ev for _, ev in pending]
         end = max([until or 0.0] + [ev.t for ev in pending])
-        while pending or self.clock() <= end:
+        submit_many = getattr(self.fleet, "submit_many", None)
+        head = 0
+        while head < len(pending) or self.clock() <= end:
             now = self.clock()
-            while pending and pending[0].t <= now:
-                self._apply(pending.pop(0))
+            while head < len(pending) and pending[head].t <= now:
+                ev = pending[head]
+                j = head + 1
+                if ev.kind == "arrive" and submit_many is not None:
+                    while (j < len(pending) and pending[j].t <= now
+                           and pending[j].kind == "arrive"):
+                        j += 1
+                if j - head > 1:        # storm: one deduplicated replay
+                    batch = pending[head:j]
+                    submit_many([(e.payload["workload"],
+                                  e.payload["priority"],
+                                  e.payload.get("train_meta"))
+                                 for e in batch])
+                    self.applied.extend(batch)
+                else:
+                    self._apply(ev)
+                head = j
             for did in self.fleet.devices:
                 if did not in self.killed:
                     self.fleet.heartbeat(did)

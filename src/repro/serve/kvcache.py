@@ -40,14 +40,21 @@ class SlotAllocator:
         return bool(self.free) and seq.prompt_len + seq.max_new <= self.max_len
 
     def admit(self, seq: Sequence) -> int:
-        assert self.can_admit(seq)
+        if not self.can_admit(seq):
+            raise RuntimeError(
+                f"cannot admit seq {seq.seq_id}: "
+                f"{len(self.free)} free slots, needs "
+                f"{seq.prompt_len + seq.max_new} <= max_len={self.max_len}")
         seq.slot = self.free.pop()
         seq.pos = 0
         self.active[seq.seq_id] = seq
         return seq.slot
 
     def release(self, seq_id: int):
-        seq = self.active.pop(seq_id)
+        seq = self.active.pop(seq_id, None)
+        if seq is None:
+            raise KeyError(f"release of unknown/already-released seq "
+                           f"{seq_id}")
         self.free.append(seq.slot)
         seq.slot = -1
 

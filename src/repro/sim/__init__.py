@@ -1,0 +1,13 @@
+"""Trace-driven multi-tenant serving simulation (`repro.sim`).
+
+The closed loop the estimator/scheduler/fleet stack is ultimately judged
+by: deterministic diurnal/bursty request traces (`traces`), a
+virtual-clock simulator that feeds them through ``FleetScheduler`` and
+serves requests at interference-inflated rates (`simulator`), and
+per-request / per-tenant SLO-attainment and tail-latency metrics
+(`metrics`).  Gated in CI by ``benchmarks/bench_trace.py``.
+"""
+from repro.sim.metrics import RequestRecord, compute_report  # noqa: F401
+from repro.sim.simulator import SimConfig, Simulator  # noqa: F401
+from repro.sim.traces import (Trace, TraceConfig, TenantSpec,  # noqa: F401
+                              generate_trace, request, tenant_profile)

@@ -1,0 +1,195 @@
+"""Virtual-clock closed-loop serving simulator over the FleetScheduler.
+
+The missing piece between "cold plans match oracles" and "the system
+holds SLOs in production": a trace (`repro.sim.traces`) drives the
+fleet's event loop AND a per-tenant request-serving loop on one shared
+virtual clock (``repro.ft.inject.FakeClock``), so sustained multi-tenant
+load, arrival storms, churn, and mid-trace faults all exercise the
+scheduler exactly as scripted — deterministically.
+
+Each tick (reusing the ``FaultInjector`` event loop):
+  1. due trace events apply — tenant arrivals admit through the fleet
+     (same-tick storms through one batched ``submit_many`` replay),
+     departures cancel outstanding requests and remove the tenant,
+     requests enqueue, kills stop a device's heartbeats, stragglers
+     feed its monitor;
+  2. live devices heartbeat and ``fleet.tick()`` runs (failure
+     detection, retries, replanning);
+  3. the serving pass: every PLACED tenant drains its FIFO request
+     queue at its interference-inflated rate — per-token time =
+     ``tbt_base x predicted_slowdown``, where the slowdown is the fleet
+     placement's estimator prediction (computed by ``solve_scenarios``
+     through the fleet's group pricing).  Unplaced tenants (queued,
+     displaced by a failure, degraded) serve nothing — their requests
+     age toward their deadlines, which is exactly how scheduler
+     decisions become SLO attainment.
+
+The simulator never touches wall time or module-level RNG: a trace +
+seed reproduces the same report bit-for-bit (the CI determinism gate in
+``benchmarks/bench_trace.py``).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, Iterable, List, Mapping, Optional, Tuple
+
+import numpy as np
+
+from repro.core.fleet import FleetConfig, FleetScheduler
+from repro.core.resources import DeviceModel
+from repro.ft.inject import FakeClock, FaultInjector, InjectEvent
+from repro.sim.metrics import RequestRecord, compute_report
+from repro.sim.traces import Trace
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """Simulator knobs (fleet knobs live in ``FleetConfig``)."""
+    tick_dt: float = 0.5             # virtual seconds per event-loop tick
+    settle: float = 30.0             # drain time after the last event
+
+
+def default_fleet_config() -> FleetConfig:
+    """The simulator's default fleet posture: k=3 colocation, fast
+    failure detection on the virtual clock, 1s retry backoff."""
+    return FleetConfig(max_group_size=3, heartbeat_timeout=3.0,
+                       backoff_base=1.0, queue_limit=64)
+
+
+class _TraceInjector(FaultInjector):
+    """FaultInjector that also understands serving-trace events:
+    ``request`` enqueues into the simulator; ``depart`` cancels the
+    tenant's outstanding requests before removing it from the fleet
+    (and tolerates tenants the fleet rejected at admission)."""
+
+    def __init__(self, sim: "Simulator"):
+        super().__init__(sim.fleet, sim.clock, tick_dt=sim.scfg.tick_dt,
+                         on_tick=sim._on_tick)
+        self.sim = sim
+
+    def _apply(self, ev: InjectEvent) -> None:
+        if ev.kind == "request":
+            self.sim._enqueue(ev)
+            self.applied.append(ev)
+        elif ev.kind == "depart":
+            self.sim._depart(ev.payload["name"])
+            self.applied.append(ev)
+        else:
+            super()._apply(ev)
+
+
+class Simulator:
+    """Run one trace against one fleet; ``run()`` returns the report.
+
+    >>> trace = generate_trace(TraceConfig(seed=0, kills=((120, "dev2"),)))
+    >>> sim = Simulator(trace, {f"dev{i}": TPU_V5E for i in range(12)})
+    >>> report = sim.run()
+    >>> report["slo"]["per_class"]["slo"]["attainment"]
+    """
+
+    def __init__(self, trace: Trace,
+                 devices: Mapping[str, DeviceModel],
+                 fleet_config: Optional[FleetConfig] = None,
+                 sim_config: Optional[SimConfig] = None):
+        self.trace = trace
+        self.scfg = sim_config or SimConfig()
+        self.clock = FakeClock()
+        self.fleet = FleetScheduler(dict(devices),
+                                    fleet_config or default_fleet_config(),
+                                    clock=self.clock)
+        self.records: List[RequestRecord] = []
+        self.queues: Dict[str, Deque[RequestRecord]] = {}
+        self.busy: Dict[str, float] = {}
+        self.resident_time: Dict[str, float] = {}
+        self.gain_samples: List[float] = []
+        self.report: Optional[Dict] = None
+        self._plan = None
+        self._plan_rev = -1
+        self._loc: Dict[str, Tuple[str, float]] = {}
+
+    # ------------------------- event handlers --------------------- #
+    def _enqueue(self, ev: InjectEvent) -> None:
+        p = ev.payload
+        spec = self.trace.tenants.get(p["tenant"])
+        if spec is None:
+            raise KeyError(f"request for unknown tenant {p['tenant']!r} "
+                           "(broken trace)")
+        rec = RequestRecord(
+            tenant=spec.name, req_id=int(p["req_id"]), arrival=ev.t,
+            n_tokens=int(p["n_tokens"]), priority=spec.priority,
+            tbt_slo=spec.tbt_slo, slack=self.trace.config.queue_slack,
+            remaining=float(p["n_tokens"]))
+        self.records.append(rec)
+        if spec.name in self.fleet:
+            self.queues.setdefault(spec.name, deque()).append(rec)
+        else:
+            # tenant was rejected at admission (or already departed):
+            # the request is canceled, not an SLO miss
+            rec.canceled = True
+
+    def _depart(self, name: str) -> None:
+        for rec in self.queues.pop(name, ()):  # cancel outstanding work
+            rec.canceled = True
+        if name in self.fleet:
+            self.fleet.remove(name)
+
+    # --------------------------- serving -------------------------- #
+    def _refresh_plan(self) -> None:
+        rev = self.fleet.stats["replans"]
+        if self._plan is not None and rev == self._plan_rev:
+            return
+        self._plan = self.fleet.plan()
+        self._plan_rev = rev
+        self._loc = {}
+        for did, p in self._plan.placements.items():
+            for n in p.workloads:
+                self._loc[n] = (did, float(p.predicted_slowdown.get(n, 1.0)))
+
+    def _on_tick(self, fleet: FleetScheduler, now: float) -> None:
+        """One serving pass over [now, now + tick_dt): every placed
+        tenant drains its queue at its interference-inflated rate."""
+        self._refresh_plan()
+        dt = self.scfg.tick_dt
+        for did, p in self._plan.placements.items():
+            self.resident_time[did] = (self.resident_time.get(did, 0.0)
+                                       + dt * len(p.workloads))
+        gains = [p.throughput_gain
+                 for p in self._plan.placements.values() if p.workloads]
+        if gains:
+            self.gain_samples.append(float(np.mean(gains)))
+
+        for tenant, q in self.queues.items():
+            if not q:
+                continue
+            loc = self._loc.get(tenant)
+            if loc is None:
+                continue               # unplaced: requests age, unserved
+            did, slowdown = loc
+            spec = self.trace.tenants[tenant]
+            tbt_eff = spec.tbt_base * max(slowdown, 1.0)
+            budget = dt
+            while q and budget > 1e-12:
+                rec = q[0]
+                if rec.start is None:
+                    rec.start = now + (dt - budget)
+                take = min(rec.remaining * tbt_eff, budget)
+                rec.remaining -= take / tbt_eff
+                rec.service += take
+                budget -= take
+                if rec.remaining <= 1e-9:
+                    rec.finish = now + (dt - budget)
+                    q.popleft()
+            self.busy[did] = self.busy.get(did, 0.0) + (dt - budget)
+
+    # ----------------------------- run ----------------------------- #
+    def run(self) -> Dict:
+        """Replay the whole trace (plus settle time) and fold the
+        records into the metrics report."""
+        injector = _TraceInjector(self)
+        injector.run(self.trace.events,
+                     until=self.trace.duration + self.scfg.settle)
+        self.report = compute_report(
+            self.trace, self.records, self.fleet, self.clock(),
+            self.busy, self.resident_time, self.gain_samples)
+        return self.report

@@ -311,3 +311,64 @@ def test_snapshot_reports_fleet_telemetry():
         assert {"state", "model", "chips", "sched"} <= set(d)
     assert set(snap["workloads"]) == {decodes[0].name, auxes[0].name}
     assert snap["stats"]["arrivals"] == 2
+
+
+# ------------------------------------------------------------------ #
+#  batched storm admission (submit_many)                              #
+# ------------------------------------------------------------------ #
+def test_submit_many_matches_sequential_with_one_replan():
+    decodes, auxes = mix(n_decode=3, n_aux=5)
+    works = decodes + auxes
+    prios = [SLO] * 3 + [BEST_EFFORT] * 5
+    seq, _ = make_fleet(n_devices=3)
+    for w, p in zip(works, prios):
+        seq.submit(w, priority=p)
+    bat, _ = make_fleet(n_devices=3)
+    decisions = bat.submit_many(list(zip(works, prios)))
+    # same final plan as one-at-a-time admission...
+    assert fleet_plans_equal(bat.plan(), seq.plan())
+    # ...but one deduplicated replay instead of one per arrival
+    assert bat.stats["replans"] == 1
+    assert seq.stats["replans"] == len(works)
+    assert [d.workload for d in decisions] == [w.name for w in works]
+    assert bat.stats["arrivals"] == len(works)
+
+
+def test_submit_many_bounded_queue_and_dedup():
+    decodes, auxes = mix(n_decode=1, n_aux=8)
+    fleet, cfg = make_fleet(n_devices=1, max_group_size=2, queue_limit=2)
+    fleet.submit(decodes[0], priority=SLO)
+    decisions = fleet.submit_many(
+        [(a, BEST_EFFORT) for a in auxes]
+        + [(auxes[0], BEST_EFFORT)])         # duplicate name in the batch
+    # one decision per DISTINCT name, in first-submission order
+    assert [d.workload for d in decisions] == [a.name for a in auxes]
+    rejected = [d for d in decisions if d.action == "rejected"]
+    assert rejected, "overflow must be rejected, not grown"
+    for r in rejected:
+        assert r.workload not in fleet
+        assert "queue full" in r.reason
+    assert len(fleet) <= 1 + cfg.max_group_size + cfg.queue_limit + 1
+
+
+def test_submit_many_empty_and_bad_priority():
+    fleet, _ = make_fleet()
+    assert fleet.submit_many([]) == []
+    decodes, _ = mix()
+    with pytest.raises(ValueError):
+        fleet.submit_many([(decodes[0], "urgent")])
+    assert len(fleet) == 0 and fleet.stats["arrivals"] == 0
+
+
+def test_injector_batches_same_tick_storm():
+    decodes, auxes = mix(n_decode=1, n_aux=4)
+    clock = FakeClock()
+    fleet, _ = make_fleet(n_devices=2, clock=clock)
+    replans_at = {}
+    trace = ([arrive(0.0, decodes[0], priority=SLO)]
+             + storm(1.0, auxes, priority=BEST_EFFORT))
+    FaultInjector(
+        fleet, clock,
+        on_tick=lambda f, now: replans_at.setdefault(now, f.stats["replans"])
+    ).run(trace, until=3.0)
+    assert replans_at[1.0] - replans_at[0.0] == 1

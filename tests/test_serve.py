@@ -150,6 +150,51 @@ def test_slot_allocator():
     assert a.can_admit(s3)
 
 
+def test_slot_allocator_admit_when_full_raises():
+    a = SlotAllocator(n_slots=1, max_len=32)
+    a.admit(Sequence(1, prompt_len=8, max_new=4))
+    with pytest.raises(RuntimeError):
+        a.admit(Sequence(2, prompt_len=8, max_new=4))
+    # the failed admit must not leak state
+    assert a.utilization == 1.0 and list(a.active) == [1]
+
+
+def test_slot_allocator_double_release_raises():
+    a = SlotAllocator(n_slots=2, max_len=32)
+    a.admit(Sequence(1, prompt_len=8, max_new=4))
+    a.release(1)
+    with pytest.raises(KeyError):
+        a.release(1)
+    with pytest.raises(KeyError):
+        a.release(99)                       # never admitted
+    # free list must not grow from failed releases
+    assert len(a.free) == 2 and a.utilization == 0.0
+
+
+def test_slot_allocator_can_admit_respects_max_len():
+    a = SlotAllocator(n_slots=4, max_len=16)
+    assert a.can_admit(Sequence(1, prompt_len=8, max_new=8))    # == max_len
+    assert not a.can_admit(Sequence(2, prompt_len=8, max_new=9))  # one over
+    with pytest.raises(RuntimeError):
+        a.admit(Sequence(3, prompt_len=20, max_new=0))
+
+
+def test_slot_allocator_utilization_round_trip():
+    a = SlotAllocator(n_slots=4, max_len=32)
+    seqs = [Sequence(i, prompt_len=4, max_new=4) for i in range(3)]
+    slots = [a.admit(s) for s in seqs]
+    assert len(set(slots)) == 3
+    assert a.utilization == pytest.approx(0.75)
+    assert a.active_slots().tolist() == sorted(slots)
+    a.release(1)
+    assert a.utilization == pytest.approx(0.5)
+    assert a.active_slots().tolist() == sorted(s for i, s in
+                                               zip(range(3), slots) if i != 1)
+    a.release(0)
+    a.release(2)
+    assert a.utilization == 0.0 and a.active_slots().tolist() == []
+
+
 def test_pick_chunk_degraded_mode_is_conservative():
     """Fleet hook: in degraded mode (device oversubscribed after a fleet
     failure) the scheduler must stop taking the largest passing chunk
