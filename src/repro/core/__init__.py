@@ -1,5 +1,7 @@
 """The paper's contribution: multi-resource GPU/TPU interference
 quantification and colocation scheduling. See DESIGN.md §1-2."""
+from repro.core.backend import (SOLVER_BACKENDS, get_solver_backend,  # noqa: F401
+                                set_solver_backend, solver_backend)
 from repro.core.resources import DEVICES, H100, RTX3090, TPU_V5E, DeviceModel  # noqa: F401
 from repro.core.profile import KernelProfile, ProfileMatrix, WorkloadProfile  # noqa: F401
 from repro.core.scenario import (CompiledScenarios, Scenario,  # noqa: F401
@@ -9,8 +11,9 @@ from repro.core.estimator import (FRACTION_FLOOR, BatchResult,  # noqa: F401
                                   estimate, estimate_batch,
                                   pairwise_slowdown, solve_scenarios,
                                   workload_slowdown)
-from repro.core.fracsearch import (LEGACY_SEARCH, FractionSearchConfig,  # noqa: F401
-                                   GroupFractions, search_group_fractions,
+from repro.core.fracsearch import (DENSE_SEARCH, LEGACY_SEARCH,  # noqa: F401
+                                   FractionSearchConfig, GroupFractions,
+                                   search_group_fractions,
                                    simplex_candidates)
 from repro.core.sensitivity import (SensitivityReport, cache_pollution_curve,  # noqa: F401
                                     partition_curve, sensitivity,

@@ -1,0 +1,86 @@
+"""Process-wide solver-backend switch: NumPy oracle vs JAX-jitted solver.
+
+Every scheduling decision in the repo — cold plans, arrival pricing, the
+k-way fraction search, fleet replay, trace simulation — bottoms out in
+the batched water-filling fixed point (`repro.core.estimator.solve_batch`).
+This module selects which implementation executes it:
+
+  * ``"numpy"`` (default): the reference implementation, retained
+    verbatim as the 1e-9 oracle (same pattern as
+    ``benchmarks/_seed_reference.py``);
+  * ``"jax"``: the ``jax.jit``-compiled port in
+    `repro.core.estimator_jax` (``lax.while_loop`` + ``vmap``, float64),
+    which runs pricing on the accelerator it schedules for and is gated
+    against the NumPy oracle at 1e-9 in CI.
+
+Selection is process-wide: ``set_solver_backend("jax")`` (or the
+``REPRO_SOLVER_BACKEND`` environment variable, read once at first use)
+switches ColocationScheduler, fracsearch, FleetScheduler and the
+serve/sim pricing in one place.  Consumers that *cache* the backend
+choice at construction time (``FractionSearchConfig.default()``, the
+scheduler's search config) pick up the backend active when they were
+built — switch before constructing schedulers.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+from typing import Iterator, Optional
+
+SOLVER_BACKENDS = ("numpy", "jax")
+_ENV_VAR = "REPRO_SOLVER_BACKEND"
+
+_backend: Optional[str] = None      # resolved lazily from the env
+
+
+def _validate(name: str) -> str:
+    norm = str(name).strip().lower()
+    if norm not in SOLVER_BACKENDS:
+        raise ValueError(
+            f"unknown solver backend {name!r}: expected one of "
+            f"{SOLVER_BACKENDS}")
+    return norm
+
+
+def _ensure_jax() -> None:
+    """Import the jax solver (enabling x64) or fail with a clear error —
+    the numpy default never imports jax at all."""
+    try:
+        import repro.core.estimator_jax  # noqa: F401
+    except ImportError as e:            # pragma: no cover - env-dependent
+        raise RuntimeError(
+            "solver backend 'jax' requested but jax is not importable; "
+            "install jax or use set_solver_backend('numpy')") from e
+
+
+def get_solver_backend() -> str:
+    """The active solver backend name ("numpy" | "jax")."""
+    global _backend
+    if _backend is None:
+        _backend = _validate(os.environ.get(_ENV_VAR, "numpy"))
+        if _backend == "jax":
+            _ensure_jax()
+    return _backend
+
+
+def set_solver_backend(name: str) -> str:
+    """Select the solver backend process-wide; returns the PREVIOUS
+    backend (so callers can restore it — or use `solver_backend`)."""
+    global _backend
+    prev = get_solver_backend()
+    new = _validate(name)
+    if new == "jax":
+        _ensure_jax()
+    _backend = new
+    return prev
+
+
+@contextmanager
+def solver_backend(name: str) -> Iterator[str]:
+    """Scoped backend override: ``with solver_backend("jax"): ...`` —
+    restores the previous backend on exit (tests, benchmarks)."""
+    prev = set_solver_backend(name)
+    try:
+        yield get_solver_backend()
+    finally:
+        set_solver_backend(prev)

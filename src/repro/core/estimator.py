@@ -41,6 +41,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.backend import get_solver_backend
 from repro.core.profile import (KernelProfile, ProfileMatrix,
                                 WorkloadProfile, effective_demand_arrays,
                                 isolated_time_arrays, utilization_arrays)
@@ -49,6 +50,17 @@ from repro.core.scenario import Scenario, compile_scenarios, scenario_device
 
 PER_SLOT_AXES = ("mxu", "vpu", "issue", "smem")
 DEVICE_AXES = ("hbm", "l2", "ici")
+
+# ---- solver floor/tolerance constants, SHARED with the jax backend ---- #
+# (repro.core.estimator_jax imports these — never inline the literals in
+# either solver, or the oracle and the port can silently drift)
+CAP_REMAIN_FLOOR = 1e-9     # floor on a freeze-round's remaining capacity
+OVERSUB_RTOL = 1e-9         # an axis is oversubscribed iff load > 1 + this
+DEMAND_EPS = 1e-12          # min worst-axis demand to count as an axis user
+RATIO_FLOOR = 1e-30         # smem equal-throttle divisor floor (keeps the
+                            # vector-wide division defined for done rows)
+TIME_EPS = 1e-12            # isolated-time floor in the slowdown ratio
+SPEED_FLOOR = 1e-9          # water-filled speed floor in 1/s terms
 
 # f -> 0 semantics: a slot fraction at or below this floor means the
 # member is ABSENT (a green context with no slots): it contributes no
@@ -121,17 +133,27 @@ class BatchResult:
 # knee; calibrated there, validated out-of-sample on pitfall 2). Mild HBM
 # latency inflation mirrors Table 1's sub-saturation slowdowns.
 _INFLATION = {"issue": (1.05, 4), "hbm": (0.10, 4)}
+_INFLATION_MIN_UTIL = 0.01   # below: too small a user to queue behind others
+_INFLATION_MAJORITY = 0.5    # at/above this share of the axis load the
+                             # kernel is the fluid-limited majority owner
 
 
-def _gather(pm: ProfileMatrix, members, fractions):
+def _gather(pm: ProfileMatrix, members, fractions, mask=None):
     """Pad scenarios to (S, K[, A]) dense arrays; padded rows are zeroed
-    so masked sums/maxes are no-ops. An ndarray `members` means uniform
-    scenario width — no padding loop (the planner's hot path)."""
+    so masked sums/maxes are no-ops. An ndarray `members` means padded
+    dense width — no padding loop (the planner's hot path); `mask` marks
+    the real members (None = every entry real, the uniform-width case)."""
     if isinstance(members, np.ndarray):
         idx = members
-        mask = np.ones(idx.shape, bool)
+        mask = (np.ones(idx.shape, bool) if mask is None
+                else np.asarray(mask, bool))
         frac = (np.asarray(fractions, np.float64) if fractions is not None
                 else np.ones(idx.shape, np.float64))
+        # padded entries carry frac 1.0 so the slot-scale division is a
+        # no-op on them (compile_scenarios pads this way already; guard
+        # direct callers handing their own mask + fraction arrays)
+        if not mask.all():
+            frac = np.where(mask, frac, 1.0)
     else:
         S = len(members)
         K = max(len(m) for m in members)
@@ -151,12 +173,18 @@ def _gather(pm: ProfileMatrix, members, fractions):
 
 
 def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
-                fractions=None, names: Optional[List[List[str]]] = None
-                ) -> BatchResult:
+                fractions=None, names: Optional[List[List[str]]] = None,
+                *, mask=None) -> BatchResult:
     """Vectorized core: solve S colocation scenarios, each a list of row
-    indices into `pm` (or a uniform-width (S, K) ndarray), with optional
-    per-member slot fractions. `names` feeds the dict-view `result(i)`;
-    array-only consumers may omit it."""
+    indices into `pm` (or a padded dense (S, K) ndarray with an optional
+    bool `mask` marking real members — no mask means every entry is
+    real), with optional per-member slot fractions. `names` feeds the
+    dict-view `result(i)`; array-only consumers may omit it.
+
+    Executes on the active solver backend (`repro.core.backend`): the
+    NumPy oracle below, or the jax.jit port (`repro.core.estimator_jax`)
+    — identical results at 1e-9, gated in CI by the bench_planner solver
+    parity sweep."""
     if len(members) == 0:
         z2 = np.zeros((0, 0))
         return BatchResult(names if names is not None else [],
@@ -168,7 +196,15 @@ def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
     if names is None and not isinstance(members, np.ndarray):
         names = [[pm.names[i] for i in m] for m in members]
     _, mask, frac, demand, duration, ws, hit, slots = _gather(
-        pm, members, fractions)
+        pm, members, fractions, mask)
+    S, K = mask.shape
+    if K > 0 and get_solver_backend() == "jax":
+        from repro.core import estimator_jax
+        speeds, slowdowns, frozen, axis_load, feasible = \
+            estimator_jax.solve_gathered(mask, frac, demand, duration, ws,
+                                         hit, slots, dev)
+        return BatchResult(names, mask, speeds, slowdowns, frozen,
+                           axis_load, feasible)
     # members at or below the exclusion floor are absent (see
     # FRACTION_FLOOR): zero their inputs so they neither contend nor
     # occupy slots; their own slowdown is patched to +inf at the end
@@ -180,7 +216,6 @@ def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
         ws = np.where(present, ws, 0.0)
         hit = np.where(present, hit, 0.0)
         slots = np.where(present, slots, 0.0)
-    S, K = mask.shape
     if K == 0:                    # every scenario empty: nothing contends
         z = np.zeros((S, 0))
         return BatchResult(names, mask, z, z, np.zeros((S, 0), np.int64),
@@ -229,11 +264,11 @@ def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
     rows = np.arange(S)
     for _ in range(K + _N_AXES):
         dem = (u * (speeds * active)[:, :, None]).sum(1)
-        cap_rem = np.maximum(1.0 - used, 1e-9)
+        cap_rem = np.maximum(1.0 - used, CAP_REMAIN_FLOOR)
         ratio = dem / cap_rem
         worst = ratio.argmax(1)
         worst_ratio = ratio[rows, worst]
-        done |= worst_ratio <= 1.0 + 1e-9
+        done |= worst_ratio <= 1.0 + OVERSUB_RTOL
         if done.all():
             break
         live = ~done
@@ -244,10 +279,10 @@ def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
         # (paper Fig. 4: even low-smem-util GEMMs slow down)
         is_smem = live & (worst == _SMEM)
         if is_smem.any():
-            users = active & (d > 1e-12) & is_smem[:, None]
+            users = active & (d > DEMAND_EPS) & is_smem[:, None]
             # only consumed where is_smem (worst_ratio > 1); the floor just
             # keeps the vector-wide division defined for finished scenarios
-            s_eq = 1.0 / np.maximum(worst_ratio, 1e-30)
+            s_eq = 1.0 / np.maximum(worst_ratio, RATIO_FLOOR)
             speeds = np.where(users, speeds * s_eq[:, None], speeds)
             used += (u * (speeds * users)[:, :, None]).sum(1)
             frozen = np.where(users, _SMEM, frozen)
@@ -258,7 +293,7 @@ def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
         # breached after granting all smaller demands in full.
         is_mm = live & (worst != _SMEM)
         if is_mm.any():
-            elig = active & (d > 1e-12) & is_mm[:, None]
+            elig = active & (d > DEMAND_EPS) & is_mm[:, None]
             cap_w = cap_rem[rows, worst]
             ds = np.where(elig, d, np.inf)
             order = np.sort(ds, axis=1)
@@ -286,14 +321,16 @@ def solve_batch(pm: ProfileMatrix, members, dev: DeviceModel,
 
     # queueing inflation on near-saturated latency-sensitive axes: applies
     # to MINORITY users of the axis (the majority owner is fluid-limited)
-    base = (t_col / np.maximum(t_iso, 1e-12)) / np.maximum(speeds, 1e-9)
+    base = (t_col / np.maximum(t_iso, TIME_EPS)) / np.maximum(speeds,
+                                                              SPEED_FLOOR)
     infl = np.ones((S, K))
     for axis, (gamma, p) in _INFLATION.items():
         ai = AXIS_INDEX[axis]
         u_ax = u[:, :, ai]
         rho = np.minimum(1.0, (speeds * u_ax).sum(1))
-        skip = ((frozen == ai) | (u_ax <= 0.01)
-                | (u_ax >= 0.5 * np.maximum(rho, 1e-9)[:, None]))
+        skip = ((frozen == ai) | (u_ax <= _INFLATION_MIN_UTIL)
+                | (u_ax >= _INFLATION_MAJORITY
+                   * np.maximum(rho, SPEED_FLOOR)[:, None]))
         infl += np.where(~skip & present, gamma * rho[:, None] ** p, 0.0)
     slowdowns = base * infl
     if excluded.any():
@@ -333,7 +370,8 @@ def solve_scenarios(scenarios: Sequence[Scenario],
         return solve_batch(ProfileMatrix.from_profiles([]), [], dev)
     dev = scenario_device(scenarios, dev)
     comp = compile_scenarios(scenarios)
-    return solve_batch(comp.pm, comp.members, dev, comp.fractions)
+    return solve_batch(comp.pm, comp.members, dev, comp.fractions,
+                       mask=comp.mask)
 
 
 def _compile_scenarios(scenarios: Sequence[Sequence[KernelProfile]],

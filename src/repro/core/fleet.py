@@ -210,7 +210,8 @@ class FleetScheduler:
                  clock: Callable[[], float] = time.monotonic):
         self.cfg = config or FleetConfig()
         self.clock = clock
-        self.search = self.cfg.fraction_search or FractionSearchConfig()
+        self.search = (self.cfg.fraction_search
+                       or FractionSearchConfig.default())
         self.devices: Dict[str, FleetDevice] = {}
         self.heartbeats = HeartbeatTracker(
             timeout_s=self.cfg.heartbeat_timeout, clock=clock)

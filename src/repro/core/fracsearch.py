@@ -85,11 +85,27 @@ class FractionSearchConfig:
     def steps_for(self, k: int) -> int:
         return max(self.coarse_steps, k + 2)
 
+    @classmethod
+    def default(cls) -> "FractionSearchConfig":
+        """The search config for the ACTIVE solver backend: the standard
+        8-step grid on numpy, `DENSE_SEARCH` on jax — the jitted solver
+        prices candidates cheaply enough to widen the grid at unchanged
+        latency budgets (ISSUE 8).  Resolved at call time, so switch the
+        backend before constructing schedulers."""
+        from repro.core.backend import get_solver_backend
+        return DENSE_SEARCH if get_solver_backend() == "jax" else cls()
+
 
 # coarse-only, no partitioned growth: bit-for-bit the seed planner's
 # fixed first-member grid at k=2 (pinned by tests against the seed)
 LEGACY_SEARCH = FractionSearchConfig(coarse_steps=4, refine_levels=0,
                                      grow_partitioned=False)
+
+# jax-backend default: 16ths keep the 8-step grid AND its level-1
+# refinement points (which land on 16ths) as a strict subset, so the
+# dense search's selected gain can never regress the standard config's;
+# the extra refine level then explores 64ths around the winner.
+DENSE_SEARCH = FractionSearchConfig(coarse_steps=16, refine_levels=2)
 
 
 @dataclass
@@ -260,7 +276,7 @@ def search_group_fractions(groups: Sequence[Sequence[WorkloadProfile]],
     Returns one GroupFractions per group: the feasible max-gain
     assignment, or (``meets_slo=False``) the least-SLO-violating one.
     """
-    cfg = config or FractionSearchConfig()
+    cfg = config or FractionSearchConfig.default()
     groups = [list(g) for g in groups]
     for g in groups:
         if len(g) < 2:

@@ -65,14 +65,16 @@ class Scenario:
 class CompiledScenarios:
     """Scenario batch lowered to solver inputs (see estimator.solve_batch).
 
-    ``members`` is a dense (S, K) ndarray when every scenario has the
-    same width (the common fan-out shape — no padding loop in the
-    solver), else a ragged list-of-lists.
+    ``members`` is always a dense (S, K_max) int64 ndarray.  Uniform-width
+    batches (the common fan-out shape) carry ``mask=None``; ragged batches
+    are padded to the widest scenario with ``mask`` marking real members,
+    so mixed k-way batches still hit one dense solve on both backends.
     """
     pm: ProfileMatrix
     members: Union[np.ndarray, List[List[int]]]
     fractions: Optional[Union[np.ndarray, List[List[float]]]]
     n_victims: np.ndarray                 # (S,)
+    mask: Optional[np.ndarray] = None     # (S, K_max) bool, None if uniform
 
     def __len__(self) -> int:
         return len(self.n_victims)
@@ -108,8 +110,20 @@ def compile_scenarios(scenarios: Sequence[Scenario]) -> CompiledScenarios:
         dense = np.asarray(members, np.int64)
         frac = np.asarray(fractions, np.float64) if any_fraction else None
         return CompiledScenarios(pm, dense, frac, n_victims)
-    return CompiledScenarios(pm, members,
-                             fractions if any_fraction else None, n_victims)
+    # Ragged (or all-empty) batch: pad to the widest scenario and carry a
+    # member mask so the solver still sees ONE dense batch.  Padded slots
+    # index row 0 with fraction 1.0 but are masked out of every reduction.
+    S = len(members)
+    K = max((len(m) for m in members), default=0)
+    idx = np.zeros((S, K), np.int64)
+    mask = np.zeros((S, K), bool)
+    frac = np.ones((S, K), np.float64)
+    for s, m in enumerate(members):
+        idx[s, :len(m)] = m
+        mask[s, :len(m)] = True
+        frac[s, :len(m)] = fractions[s]
+    return CompiledScenarios(pm, idx, frac if any_fraction else None,
+                             n_victims, mask)
 
 
 def group_victim_scenarios(members: Sequence[WorkloadProfile],

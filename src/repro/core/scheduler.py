@@ -348,9 +348,10 @@ class ColocationScheduler:
         self.dev = dev
         self.max_group_size = int(max_group_size)
         self.allow_partition = allow_partition
-        # default: coarse simplex + 1 refinement level, partitioned
-        # growth on; LEGACY_SEARCH reproduces the seed's fixed grid
-        self.search = fraction_search or FractionSearchConfig()
+        # default: backend-resolved (coarse simplex + 1 refinement level
+        # on numpy; the denser DENSE_SEARCH grid on the jax backend);
+        # LEGACY_SEARCH reproduces the seed's fixed grid
+        self.search = fraction_search or FractionSearchConfig.default()
         self._works: Dict[str, WorkloadProfile] = {}   # insertion-ordered
         self._uid: Dict[str, int] = {}
         self._next_uid = 0

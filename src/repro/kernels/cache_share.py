@@ -1,0 +1,69 @@
+"""Pallas kernel for the estimator's cache-share / thrash-cliff stage.
+
+The batched interference solver's cache model (paper Fig. 3) assigns
+every scenario member a shared-cache residency share:
+
+  * a member colocated with any other cache user keeps its hits only
+    while the COMBINED working set fits — one byte over capacity and
+    interleaved streams evict each other before reuse (share -> 0);
+  * a lone cache user keeps the proportional residency min(1, C / ws);
+  * members with no working set are unaffected (share 1).
+
+This file provides that stage as a row-blocked Pallas TPU kernel
+(`cache_share_pallas`) so the jax solver backend keeps the whole
+pricing pipeline on-chip when it actually runs on a TPU.  Platform
+detection lives in `repro.core.estimator_jax` — on CPU/GPU the jnp
+fallback (`repro.core.estimator_jax.cache_share_ref`) computes the
+identical expression, and tests pin kernel == fallback in interpret
+mode at exact equality.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_LANES = 128      # TPU lane width: the member axis is padded up to it
+
+
+def _kernel(ws_ref, pres_ref, cap_ref, out_ref):
+    ws = ws_ref[...]                       # (br, Kp)
+    pres = pres_ref[...]                   # (br, Kp) 0/1 in ws dtype
+    cap = cap_ref[0]
+    total_ws = ws.sum(axis=-1, keepdims=True)      # padded columns are 0
+    resident_col = jnp.where(total_ws > cap, 0.0, 1.0)
+    nk = pres.sum(axis=-1, keepdims=True)
+    has_ws = ws > 0
+    out_ref[...] = jnp.where(
+        has_ws & (nk > 1), resident_col,
+        jnp.where(has_ws, jnp.minimum(1.0, cap / jnp.maximum(ws, 1.0)),
+                  1.0))
+
+
+def cache_share_pallas(ws, present, cache_cap, block_rows: int = 256,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Cache share per scenario member: ws/present are (S, K) with
+    exclusion-zeroed working sets; returns (S, K) in ws.dtype.  K is
+    padded to the 128-wide lane dim and rows to `block_rows`, so the
+    row reductions see only zeroed padding."""
+    S, K = ws.shape
+    pres = present.astype(ws.dtype)
+    kp = (-K) % _LANES
+    block_rows = min(block_rows, max(S, 1))
+    rp = (-S) % block_rows
+    if kp or rp:
+        ws = jnp.pad(ws, ((0, rp), (0, kp)))
+        pres = jnp.pad(pres, ((0, rp), (0, kp)))
+    cap = jnp.reshape(jnp.asarray(cache_cap, ws.dtype), (1,))
+    n = (S + rp) // block_rows
+    out = pl.pallas_call(
+        _kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((block_rows, K + kp), lambda i: (i, 0)),
+                  pl.BlockSpec((block_rows, K + kp), lambda i: (i, 0)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((block_rows, K + kp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((S + rp, K + kp), ws.dtype),
+        interpret=interpret,
+    )(ws, pres, cap)
+    return out[:S, :K]

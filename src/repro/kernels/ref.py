@@ -45,6 +45,10 @@ def ref_ssm_scan(x, dt, A, B, C):
     """Sequential-oracle mamba1 scan. x/dt (Bb,S,di); A (di,N); B/C (Bb,S,N)."""
     Bb, S, di = x.shape
     N = A.shape[1]
+    # f32 scan state by contract (matches models.ssm.mamba1_scan): pin
+    # dt/A so f64 inputs under x64 don't promote the carry
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
 
     def step(h, t):
         dA = jnp.exp(dt[:, t][..., None] * A)

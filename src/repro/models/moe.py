@@ -126,7 +126,11 @@ def _route(router, x_flat, cfg: ModelConfig):
     gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
     # load-balance aux loss (Switch-style): E * sum_e f_e * p_e
     me = jnp.mean(probs, axis=0)
-    ce = jnp.mean((jax.nn.one_hot(ids, m.n_experts).sum(axis=1)), axis=0)
+    # pin one_hot to the routing dtype: its float_ default is f64 under
+    # x64 (the solver backend enables it), which would leak into the
+    # f32 aux-loss scan carry
+    ce = jnp.mean(jax.nn.one_hot(ids, m.n_experts,
+                                 dtype=probs.dtype).sum(axis=1), axis=0)
     aux = m.n_experts * jnp.sum(me * ce)
     return gates, ids, aux
 

@@ -101,6 +101,11 @@ def mamba1_scan(x, dt, A, B, C, chunk: int, ctx=None):
     of this form (203TB -> ~4TB per train step for falcon-mamba)."""
     Bb, S, di = x.shape
     N = A.shape[1]
+    # the scan state is f32 by contract; pin the streamed inputs too so
+    # f64 callers (x64 mode, enabled by the jax solver backend) don't
+    # promote the carry mid-scan
+    dt = dt.astype(jnp.float32)
+    A = A.astype(jnp.float32)
 
     def step(h, inp):
         xt, dtt, Bt, Ct = inp                                # (B,di),(B,N)

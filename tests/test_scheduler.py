@@ -133,11 +133,14 @@ def test_arrival_prices_one_row_departure_prices_nothing():
     sched.plan()
     arrival_scen = sched.stats["scenarios_solved"] - cold_scen
     # the new row: per pair, the arrival's kernels probe the resident's
-    # rep and vice versa, plus the fraction search's coarse grid (7
-    # vectors at the default 8 steps) and refinement level for every
+    # rep and vice versa, plus the fraction search's coarse grid
+    # (steps-1 vectors at k=2) and refinement levels for every
     # SLO-failing pair — a larger constant than the legacy 3-point
-    # grid, but still linear in n, far below the O(n^2) cold price
-    assert 0 < arrival_scen <= 40 * (n + 1)
+    # grid, but still linear in n, far below the O(n^2) cold price.
+    # The constant follows the ACTIVE search config (the jax backend's
+    # denser default grid prices more candidates per pair).
+    per_pair = 5 * (sched.search.steps_for(2) - 1 + sched.search.refine_levels)
+    assert 0 < arrival_scen <= per_pair * (n + 1)
     assert arrival_scen < cold_scen / 4
 
     before = sched.stats["scenarios_solved"]
