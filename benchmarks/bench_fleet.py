@@ -14,10 +14,18 @@ run) against a ``FleetScheduler`` and gates the robustness claims:
      bounded — no silent unbounded growth;
   3. straggler: a slow device degrades via the EWMA monitor; SLO work
      migrates off it while best-effort may remain.
+  4. scale (scoped repair): a 256-device heterogeneous fleet (alternating
+     v5e/v5p) under ~64 churn mutations — arrivals, departures, planned
+     drains, revives — must repair INCREMENTALLY: p95 devices touched
+     per scoped repair <= 16, mean replan latency >= 10x faster than a
+     forced full-replay twin, total packed gain within the configured
+     divergence epsilon of a cold replay, the placed-SLO set identical
+     to the cold replay, and zero event-loop errors.
 
-`--quick` (the CI smoke) runs the same traces — they are already small —
-and writes BENCH_fleet.json (recovery latency, evictions, SLO
-re-placement rate, online==cold) as a CI artifact next to
+`--quick` (the CI smoke) runs the same traces — they are already small,
+and the scale gate is sized to stay inside the CI budget — and writes
+BENCH_fleet.json (recovery latency, evictions, SLO re-placement rate,
+online==cold, the scale gate) as a CI artifact next to
 BENCH_planner.json.
 
   PYTHONPATH=src python benchmarks/bench_fleet.py          # full gates
@@ -33,8 +41,12 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent))
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
+import numpy as np
+
 from bench_planner import decode_heavy_mix
-from repro.core import TPU_V5E, BEST_EFFORT, SLO, FleetConfig, FleetScheduler
+from repro.core import (TPU_V5E, TPU_V5P, BEST_EFFORT, SLO, FleetConfig,
+                        FleetScheduler, KernelProfile, WorkloadProfile)
+from repro.core.resources import RESOURCE_AXES
 from repro.ft.inject import FakeClock, FaultInjector, arrive, kill, slow, storm
 
 TOL = 1e-9
@@ -204,6 +216,158 @@ def bench_straggler(dev):
 
 
 # ------------------------------------------------------------------ #
+#  Scale gate: scoped repair on a 256-device heterogeneous fleet      #
+# ------------------------------------------------------------------ #
+SCALE_DEVICES = 256
+SCALE_INIT = 192        # initial tenants (submitted in waves)
+SCALE_WAVE = 16
+SCALE_CHURN = 64        # churn mutations after the initial load
+SCALE_TOUCHED_P95 = 16.0
+SCALE_SPEEDUP = 10.0
+SCALE_FULL_MUTATIONS = 3   # mutations timed on the forced-full twin
+
+
+def loose_mix(n, prefix="s"):
+    """n loose-SLO (1.5x) workloads, alternating compute- and
+    bandwidth-leaning so triples contend mildly on one axis but always
+    meet their SLO at full share — the scale gate measures repair
+    *width*, not partition-search depth.  Demands are absolute (sized
+    off v5e capacities), so the same workload leaves genuinely more
+    headroom on a v5p — the heterogeneous greedy sees different prices
+    per model."""
+    out = []
+    for i in range(n):
+        if i % 2 == 0:
+            u = {"mxu": 0.40, "vpu": 0.05, "issue": 0.06,
+                 "hbm": 0.18, "l2": 0.18}
+        else:
+            u = {"mxu": 0.12, "vpu": 0.04, "issue": 0.05,
+                 "hbm": 0.38, "l2": 0.38}
+        d = {r: u.get(r, 0.0) * TPU_V5E.capacity(r) for r in RESOURCE_AXES}
+        name = f"{prefix}{i}"
+        out.append(WorkloadProfile(
+            name, (KernelProfile(f"{name}#step", demand=d, duration=1.0),),
+            slo_slowdown=1.5))
+    return out
+
+
+def scale_models(n=SCALE_DEVICES):
+    """The heterogeneous mix: even devices v5e, odd devices v5p."""
+    return {f"dev{i:03d}": (TPU_V5E if i % 2 == 0 else TPU_V5P)
+            for i in range(n)}
+
+
+def _scale_churn(fleet, clock, init, churn):
+    """Apply the fixed churn script: per 8-mutation block, 3 arrivals,
+    3 departures, one planned drain (decommission) and one revive of
+    the oldest drained device — every kind routes its own RepairScope."""
+    prios = [SLO, BEST_EFFORT]
+    drained = []
+    ci = si = 0
+    for m in range(SCALE_CHURN):
+        step = m % 8
+        if step in (0, 2, 4):
+            fleet.submit(churn[ci], priority=prios[ci % 2])
+            ci += 1
+        elif step in (1, 3, 5):
+            name = init[si].name
+            si += 1
+            if name in fleet:
+                fleet.remove(name)
+        elif step == 6:
+            fleet.decommission(f"dev{(m * 5) % SCALE_DEVICES:03d}")
+            drained.append(f"dev{(m * 5) % SCALE_DEVICES:03d}")
+        else:
+            fleet.heartbeat(drained.pop(0))
+        clock.advance(1.0)
+
+
+def bench_scale():
+    """256-device churn under scoped repair, gated four ways: repair
+    locality (touched p95), replan speedup vs a forced-full twin, the
+    bounded-divergence contract vs a cold replay, and exact SLO-set
+    agreement with that cold replay."""
+    cfg = FleetConfig(max_group_size=3, queue_limit=64,
+                      heartbeat_timeout=1e9)
+    models = scale_models()
+    clock = FakeClock()
+    fleet = FleetScheduler(models, cfg, clock=clock)
+    init = loose_mix(SCALE_INIT, prefix="s")
+    prios = [SLO if i % 2 == 0 else BEST_EFFORT for i in range(SCALE_INIT)]
+    for w0 in range(0, SCALE_INIT, SCALE_WAVE):
+        fleet.submit_many(list(zip(init[w0:w0 + SCALE_WAVE],
+                                   prios[w0:w0 + SCALE_WAVE])))
+        clock.advance(1.0)
+    n_init = len(fleet.repairs)
+
+    churn = loose_mix(SCALE_CHURN, prefix="c")
+    _scale_churn(fleet, clock, init, churn)
+
+    churn_recs = fleet.repairs[n_init:]
+    scoped = [r for r in churn_recs if not r.full]
+    touched_p95 = float(np.percentile(
+        [r.devices_touched for r in scoped], 95)) if scoped else float("inf")
+    scoped_lat = float(np.mean([r.latency_s for r in churn_recs]))
+
+    plan = fleet.plan()
+    slo_names = [p.name for p, prio in fleet.workloads if prio == SLO]
+    slo_rate = plan.placement_rate(slo_names)
+
+    # bounded-divergence contract vs a cold full replay over the same
+    # pool and surviving devices (one batched storm = ONE cold replay)
+    full_cfg = FleetConfig(max_group_size=3, queue_limit=64,
+                           heartbeat_timeout=1e9, repair_mode="full")
+    survivors = {did: d.model for did, d in fleet.devices.items()
+                 if d.state != "dead"}
+    cold = FleetScheduler(survivors, full_cfg)
+    cold.submit_many([(p, prio) for p, prio in fleet.workloads])
+    cold_plan = cold.plan()
+    gain_ratio = (plan.total_gain / cold_plan.total_gain
+                  if cold_plan.total_gain > 0 else 1.0)
+    slo_sets_match = ({n for n in slo_names if n in plan.placed}
+                      == {n for n in slo_names if n in cold_plan.placed})
+
+    # forced-full twin: same fleet and load, repair_mode="full" — time a
+    # handful of the same mutation kinds through the cold-replay path
+    twin = FleetScheduler(scale_models(), full_cfg, clock=FakeClock())
+    twin.submit_many(list(zip(init, prios)))
+    n_twin = len(twin.repairs)
+    twin.submit(loose_mix(1, prefix="t")[0], priority=BEST_EFFORT)
+    twin.remove(init[0].name)
+    twin.decommission("dev030")
+    full_lat = float(np.mean(
+        [r.latency_s for r in twin.repairs[n_twin:][:SCALE_FULL_MUTATIONS]]))
+    speedup = full_lat / max(scoped_lat, 1e-12)
+
+    res = {
+        "devices": SCALE_DEVICES,
+        "device_models": sorted({m.name for m in models.values()}),
+        "workloads_final": len(fleet),
+        "churn_mutations": SCALE_CHURN,
+        "churn_repairs": len(churn_recs),
+        "scoped_repairs": fleet.stats["scoped_repairs"],
+        "full_replays": fleet.stats["full_replays"],
+        "repair_fallbacks": fleet.stats["repair_fallbacks"],
+        "touched_p95": touched_p95,
+        "scoped_mean_latency_s": scoped_lat,
+        "full_mean_latency_s": full_lat,
+        "replan_speedup": speedup,
+        "gain_ratio_vs_cold": gain_ratio,
+        "divergence_epsilon": cfg.divergence_epsilon,
+        "slo_replacement_rate": slo_rate,
+        "slo_sets_match": bool(slo_sets_match),
+        "event_loop_errors": fleet.stats["errors"],
+    }
+    res["pass"] = bool(
+        touched_p95 <= SCALE_TOUCHED_P95
+        and speedup >= SCALE_SPEEDUP
+        and gain_ratio >= 1.0 - cfg.divergence_epsilon
+        and slo_rate == 1.0 and slo_sets_match
+        and fleet.stats["errors"] == 0)
+    return res
+
+
+# ------------------------------------------------------------------ #
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
@@ -241,11 +405,34 @@ def main(argv=None):
     print(f"  SLO on degraded device: "
           f"{straggler['slo_on_degraded_device'] or 'none'}")
 
+    print("== scale (scoped repair, 256 heterogeneous devices) ==")
+    scale = bench_scale()
+    print(f"  fleet: {scale['devices']} devices "
+          f"({'/'.join(scale['device_models'])}), "
+          f"{scale['workloads_final']} tenants after "
+          f"{scale['churn_mutations']} churn mutations")
+    print(f"  repairs: {scale['scoped_repairs']} scoped, "
+          f"{scale['full_replays']} full "
+          f"({scale['repair_fallbacks']} fallbacks); "
+          f"touched p95 {scale['touched_p95']:.0f} devices "
+          f"(gate <= {SCALE_TOUCHED_P95:.0f})")
+    print(f"  replan latency: {scale['scoped_mean_latency_s'] * 1e3:.1f} ms "
+          f"scoped vs {scale['full_mean_latency_s'] * 1e3:.1f} ms full "
+          f"-> {scale['replan_speedup']:.0f}x "
+          f"(gate >= {SCALE_SPEEDUP:.0f}x)")
+    print(f"  divergence: gain ratio vs cold "
+          f"{scale['gain_ratio_vs_cold']:.4f} "
+          f"(gate >= {1.0 - scale['divergence_epsilon']:.2f}); "
+          f"SLO sets match: {scale['slo_sets_match']}")
+    print(f"  SLO placement rate: {scale['slo_replacement_rate']:.0%}; "
+          f"event-loop errors: {scale['event_loop_errors']}")
+
     print("\n== acceptance ==")
     for name, r in (("recovery", recovery), ("admission", admission),
-                    ("straggler", straggler)):
+                    ("straggler", straggler), ("scale", scale)):
         print(f"  {name}: {'PASS' if r['pass'] else 'FAIL'}")
-    ok = recovery["pass"] and admission["pass"] and straggler["pass"]
+    ok = (recovery["pass"] and admission["pass"] and straggler["pass"]
+          and scale["pass"])
 
     json_path = args.json or ("BENCH_fleet.json" if args.quick else None)
     if json_path:
@@ -253,9 +440,11 @@ def main(argv=None):
             "recovery": recovery,
             "admission": admission,
             "straggler": straggler,
+            "scale": scale,
             "acceptance": {"recovery": recovery["pass"],
                            "admission": admission["pass"],
                            "straggler": straggler["pass"],
+                           "scale": scale["pass"],
                            "all": ok},
         }
         Path(json_path).write_text(json.dumps(payload, indent=2) + "\n")

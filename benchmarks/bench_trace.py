@@ -34,23 +34,31 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.core import TPU_V5E
+from repro.core import TPU_V5E, TPU_V5P
 from repro.sim import Simulator, TraceConfig, generate_trace
 
 # the fixed gate trace: 36 tenants (half SLO) on 12 devices (36 slots at
 # k=3), 240 virtual seconds of diurnal+burst traffic (~2.5k requests),
-# dev3 killed mid-trace while a burst window is possible
+# dev3 killed mid-trace while a burst window is possible.  The fleet is
+# HETEROGENEOUS — alternating v5e/v5p — so every pricing decision, the
+# kill recovery, and the determinism twin exercise two device models.
 GATE_TRACE = TraceConfig(seed=2026, duration=240.0, n_tenants=36,
                          kills=((120.0, "dev3"),))
 GATE_DEVICES = 12
 ATTAINMENT_TARGET = 0.95
 
 
+def hetero_models(n_devices: int) -> dict:
+    """Alternating two-model mix: even devices v5e, odd devices v5p."""
+    return {f"dev{i}": (TPU_V5E if i % 2 == 0 else TPU_V5P)
+            for i in range(n_devices)}
+
+
 def run_once(cfg: TraceConfig, n_devices: int = GATE_DEVICES) -> dict:
     """One full generate -> simulate -> report pass (fresh RNG, fresh
     clock, fresh fleet — everything derives from cfg.seed)."""
     trace = generate_trace(cfg)
-    sim = Simulator(trace, {f"dev{i}": TPU_V5E for i in range(n_devices)})
+    sim = Simulator(trace, hetero_models(n_devices))
     return sim.run()
 
 
@@ -65,6 +73,10 @@ def gate(report: dict, twin: dict) -> dict:
         "trace_floor": (report["requests"]["total"] >= 1000
                         and report["trace"]["tenants"] >= 32
                         and report["fleet"]["device_deaths"] >= 1),
+        # two genuinely different device models in the gate fleet
+        "heterogeneous_fleet": len({m.name for m in
+                                    hetero_models(GATE_DEVICES).values()
+                                    }) == 2,
     }
     checks["all"] = all(checks.values())
     return checks

@@ -1,8 +1,10 @@
 """The paper's contribution: multi-resource GPU/TPU interference
 quantification and colocation scheduling. See DESIGN.md §1-2."""
 from repro.core.backend import (SOLVER_BACKENDS, get_solver_backend,  # noqa: F401
-                                set_solver_backend, solver_backend)
-from repro.core.resources import DEVICES, H100, RTX3090, TPU_V5E, DeviceModel  # noqa: F401
+                                set_solver_backend, solver_backend,
+                                warmup_solver)
+from repro.core.resources import (DEVICES, H100, RTX3090, TPU_V5E,  # noqa: F401
+                                  TPU_V5P, DeviceModel)
 from repro.core.profile import KernelProfile, ProfileMatrix, WorkloadProfile  # noqa: F401
 from repro.core.scenario import (CompiledScenarios, Scenario,  # noqa: F401
                                  compile_scenarios, group_victim_scenarios)
@@ -22,5 +24,7 @@ from repro.core.scheduler import (ColocationScheduler, Plan, Placement,  # noqa:
                                   evaluate_group, evaluate_group_partitioned,
                                   evaluate_pair, evaluate_pair_partitioned,
                                   plan_colocation)
+from repro.core.repair import (RepairPlanner, RepairRecord,  # noqa: F401
+                               RepairResult, RepairScope)
 from repro.core.fleet import (BEST_EFFORT, SLO, AdmissionDecision,  # noqa: F401
                               FleetConfig, FleetPlan, FleetScheduler)

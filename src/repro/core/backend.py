@@ -84,3 +84,21 @@ def solver_backend(name: str) -> Iterator[str]:
         yield get_solver_backend()
     finally:
         set_solver_backend(prev)
+
+
+def warmup_solver(dev, ks=(2, 3), buckets=None) -> int:
+    """Ahead-of-time compile the jax solver's common padded shapes so a
+    scheduler's first replans don't pay the ~0.8 s/shape XLA compile
+    (ROADMAP item 2).  ``ks`` are the scenario widths to warm (group
+    sizes: a k-member group's pricing scenarios are k wide); ``buckets``
+    the padded batch sizes (default: the smallest bucket, which every
+    small scheduler batch lands in).  Traces are keyed by shape only —
+    device capacities are traced operands — so one warmup covers every
+    device model.  Returns the number of NEW traces compiled; a no-op
+    returning 0 on the numpy backend (schedulers can call it
+    unconditionally)."""
+    if get_solver_backend() != "jax":
+        return 0
+    from repro.core import estimator_jax
+    kwargs = {} if buckets is None else {"buckets": tuple(buckets)}
+    return estimator_jax.warmup(dev, ks=tuple(ks), **kwargs)

@@ -239,6 +239,29 @@ def _solve_padded(demand, duration, ws, hit, slots, frac, mask, cap_vec,
         cap_vec, cache_cap, n_slots)
 
 
+def warmup(dev: DeviceModel, ks=(2, 3),
+           buckets=(_MIN_BUCKET,)) -> int:
+    """Ahead-of-time compile the (bucket, K) shapes a scheduler's group
+    pricing will hit, with all-masked zero batches (they solve to
+    no-ops).  The dummy operands match the real call signature exactly —
+    float64 numpy arrays, python-float scalars — so the warmed traces
+    ARE the cache entries later solves hit; device capacities are traced
+    operands, so the traces are shared across device models.  Returns
+    the number of new traces compiled (0 when every shape was warm)."""
+    before = _trace_count
+    use_pallas = _use_pallas_share()
+    for K in ks:
+        for S in buckets:
+            shape = (int(S), int(K))
+            _solve_padded(
+                np.zeros(shape + (_N_AXES,)), np.zeros(shape),
+                np.zeros(shape), np.zeros(shape), np.zeros(shape),
+                np.ones(shape), np.zeros(shape, bool),
+                dev.capacity_vector(), dev.cache_capacity,
+                float(dev.n_slots), use_pallas_share=use_pallas)
+    return _trace_count - before
+
+
 def _use_pallas_share() -> bool:
     """Platform detection for the Pallas cache-share kernel: only when
     jax is actually executing on a TPU (the lax fallback is the same

@@ -31,50 +31,47 @@ hooks), and keeps the whole system live through faults:
     the event loop: internal failures become ``action="error"``
     decisions, not exceptions).
 
-**Determinism / the recovery gate.**  The mapping of admitted workloads
-to devices is recomputed by a deterministic replay — priority classes
-in order, arrival order within a class, each workload taking the
-max-gain feasible device (earliest device on ties) — over a fleet-level
-price cache keyed ``(device model, member uids)``.  Pricing is batched
-per replay step and DEDUPLICATED across devices and events by that
-cache (two empty v5e devices price a candidate group once, and a
-migration re-prices only groups never seen before).  Because the replay
-is a pure function of (tracked pool, live devices, prices), the online
-fleet state after any fault trace equals a cold ``FleetScheduler`` plan
-over the surviving devices and workloads — the recovery gate
-``benchmarks/bench_fleet.py`` enforces at 1e-9.
+**Determinism / the repair contract.**  Every mutation computes a
+``RepairScope`` (the workloads needing placement plus the devices it
+touched) and hands it to the ``RepairPlanner`` (`repro.core.repair`):
+small/wide scopes take the historical deterministic full replay —
+priority classes in order, arrival order within a class, each workload
+on the max-gain feasible device (earliest device on ties) — while local
+scopes at scale take a **scoped repair** that replays only the scope,
+with an explicit bounded-divergence contract (total gain ≥ (1 − ε) ×
+the cold replay, identical SLO placement set; see ``repro.core.repair``
+for the fallback rules).  Pricing is batched per replay step and
+DEDUPLICATED across devices and events by a fleet-level price cache
+keyed ``(device model, member uids)``.  On fleets small enough that
+every scope is fleet-wide (the historical gate sizes) the full-replay
+path always runs, so the online fleet state after any fault trace still
+equals a cold ``FleetScheduler`` plan over the surviving devices and
+workloads — ``benchmarks/bench_fleet.py`` enforces that at 1e-9, and
+gates the divergence contract at scale.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
 from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
-                    Sequence, Tuple)
+                    Sequence, Set, Tuple)
 
+from repro.core.backend import warmup_solver
 from repro.core.estimator import solve_scenarios
 from repro.core.fracsearch import (FractionSearchConfig, group_metrics,
                                    member_slowdowns, search_group_fractions)
 from repro.core.profile import KernelProfile, WorkloadProfile
+# lifecycle constants live in repro.core.repair (shared with the
+# planner); re-exported here for the historical import path
+from repro.core.repair import (BEST_EFFORT, D_DEAD, D_DEGRADED, D_HEALTHY,
+                               DEGRADED, PLACED, QUEUED, SLO, _PRIORITY_RANK,
+                               RepairPlanner, RepairRecord, RepairResult,
+                               RepairScope)
 from repro.core.resources import DeviceModel
 from repro.core.scenario import group_victim_scenarios
 from repro.core.scheduler import ColocationScheduler, Placement
 from repro.ft import (HeartbeatTracker, RescalePlan, StragglerMonitor,
                       plan_rescale)
-
-# priority classes (admission order: SLO replays before best-effort)
-SLO = "slo"
-BEST_EFFORT = "best_effort"
-_PRIORITY_RANK = {SLO: 0, BEST_EFFORT: 1}
-
-# workload lifecycle states
-PLACED = "placed"
-QUEUED = "queued"
-DEGRADED = "degraded"          # final: capacity genuinely insufficient
-
-# device lifecycle states
-D_HEALTHY = "healthy"
-D_DEGRADED = "degraded"        # straggling: best-effort only
-D_DEAD = "dead"
 
 
 @dataclass(frozen=True)
@@ -97,6 +94,22 @@ class FleetConfig:
         slot-fraction search exactly like the single-device scheduler.
     straggler_factor / straggler_warmup: per-device ``StragglerMonitor``
         EWMA detection knobs.
+    repair_mode: "scoped" (default) routes local mutations through the
+        scoped repair path at scale; "full" forces the historical cold
+        replay on every mutation (the 1e-9 online==cold behavior,
+        unconditionally).
+    repair_probe: how many of the emptiest live devices a scoped repair
+        considers as placement candidates beyond the scope's own.
+    full_replay_fraction: a scope touching more than this fraction of
+        the live fleet falls back to the full replay (which also makes
+        every fleet of ≲ repair_probe / fraction devices take the
+        full-replay path always).
+    divergence_epsilon: the bounded-divergence contract's ε — scoped
+        total gain must stay ≥ (1 − ε) × the cold replay's (asserted by
+        tests and the bench_fleet scale gate; advisory at runtime).
+    warmup_solver: ahead-of-time compile the jax solver's common
+        (bucket, K) shapes at construction (no-op on the numpy
+        backend) so the first replans don't pay per-shape XLA compiles.
     """
     max_group_size: int = 3
     queue_limit: int = 16
@@ -107,6 +120,11 @@ class FleetConfig:
     fraction_search: Optional[FractionSearchConfig] = None
     straggler_factor: float = 3.0
     straggler_warmup: int = 3
+    repair_mode: str = "scoped"
+    repair_probe: int = 8
+    full_replay_fraction: float = 0.25
+    divergence_epsilon: float = 0.05
+    warmup_solver: bool = False
 
 
 @dataclass(frozen=True)
@@ -176,6 +194,13 @@ class FleetPlan:
         return {n: did for did, p in self.placements.items()
                 for n in p.workloads}
 
+    @property
+    def total_gain(self) -> float:
+        """Sum of packed throughput gains over occupied devices — the
+        quantity the bounded-divergence contract compares between a
+        scoped-repaired fleet and a cold replay."""
+        return sum(p.throughput_gain for p in self.placements.values())
+
     def placement_rate(self, names: Iterable[str]) -> float:
         """Fraction of ``names`` currently placed (1.0 for an empty set)."""
         names = list(names)
@@ -222,18 +247,32 @@ class FleetScheduler:
         self.decisions: List[AdmissionDecision] = []
         self._price_cache: Dict[Tuple[str, Tuple[int, ...]], _Price] = {}
         self._reps: Dict[Tuple[int, str], KernelProfile] = {}
+        # uid -> cache keys reverse indexes: departures drop exactly the
+        # entries that mention the uid instead of scanning every key
+        self._uid_price_keys: Dict[int, Set[Tuple[str, Tuple[int, ...]]]] = {}
+        self._uid_rep_keys: Dict[int, Set[Tuple[int, str]]] = {}
         self._assignment: Dict[str, str] = {}        # name -> device_id
         self._groups: Dict[str, List[_Tracked]] = {}  # device_id -> members
         self._info: Dict[str, _Price] = {}           # device_id -> group price
+        self.planner = RepairPlanner(self)
+        self.repairs: List[RepairRecord] = []
         self.stats: Dict[str, int] = {
             "arrivals": 0, "departures": 0, "rejected": 0, "evicted": 0,
             "migrated": 0, "displaced": 0, "retries": 0, "device_deaths": 0,
-            "replans": 0, "scenarios_solved": 0, "groups_priced": 0,
+            "replans": 0, "scoped_repairs": 0, "full_replays": 0,
+            "repair_fallbacks": 0, "scenarios_solved": 0, "groups_priced": 0,
             "errors": 0,
         }
         items = devices.items() if isinstance(devices, Mapping) else devices
         for did, model in items:
             self.add_device(did, model)
+        if self.cfg.warmup_solver:
+            # the jitted solver traces per (bucket, K) shape, shared
+            # across device models — one warmup covers the whole fleet
+            models = {d.model.name: d.model for d in self.devices.values()}
+            for model in models.values():
+                warmup_solver(model,
+                              ks=range(2, self.cfg.max_group_size + 1))
 
     # ----------------------------- devices ------------------------ #
     def add_device(self, device_id: str, model: DeviceModel,
@@ -255,7 +294,9 @@ class FleetScheduler:
         self.heartbeats.beat(device_id)
         if self._tracked:
             # new capacity: queued/degraded workloads get another shot
-            self._replan(f"device {device_id} added")
+            self._replan(RepairScope(
+                "capacity", f"device {device_id} added",
+                workloads=self._waiting(), devices=(device_id,)))
 
     def heartbeat(self, device_id: str, now: Optional[float] = None) -> None:
         """A device host reports in.  A beat from a dead device revives
@@ -268,7 +309,9 @@ class FleetScheduler:
             dev.state = D_HEALTHY
             self._decide("device-recovered", device=device_id,
                          reason="heartbeat resumed")
-            self._replan(f"device {device_id} recovered")
+            self._replan(RepairScope(
+                "capacity", f"device {device_id} recovered",
+                workloads=self._waiting(), devices=(device_id,)))
 
     def revive_device(self, device_id: str) -> None:
         """Operator override: clear a device's degraded (straggler) state."""
@@ -279,7 +322,9 @@ class FleetScheduler:
             dev.monitor.n = 0
             self._decide("device-recovered", device=device_id,
                          reason="straggle cleared")
-            self._replan(f"device {device_id} revived")
+            self._replan(RepairScope(
+                "capacity", f"device {device_id} revived",
+                workloads=self._waiting(), devices=(device_id,)))
 
     def decommission(self, device_id: str) -> None:
         """Planned removal: drain the device and re-place its workloads
@@ -289,8 +334,11 @@ class FleetScheduler:
             raise KeyError(f"unknown device: {device_id!r}")
         if dev.state == D_DEAD:
             return                      # documented no-op: already drained
+        residents = self._residents(device_id)
         self._mark_dead(dev, reason="decommissioned")
-        self._replan(f"device {device_id} decommissioned")
+        self._replan(RepairScope(
+            "device-dead", f"device {device_id} decommissioned",
+            workloads=residents))
 
     def observe_step(self, device_id: str, step: int, dt: float) -> bool:
         """Feed one step-time observation to the device's straggler
@@ -306,7 +354,12 @@ class FleetScheduler:
                 self._decide("device-degraded", device=device_id,
                              reason=f"straggling: dt={dt:.3g} vs "
                                     f"ewma={dev.monitor.ewma:.3g}")
-                self._replan(f"device {device_id} degraded")
+                # SLO residents must migrate off; best-effort may stay
+                slo_res = tuple(n for n in self._residents(device_id)
+                                if self._tracked[n].priority == SLO)
+                self._replan(RepairScope(
+                    "device-degraded", f"device {device_id} degraded",
+                    workloads=slo_res, devices=(device_id,)))
             return straggling
         except Exception as e:      # pragma: no cover - defensive seal
             self._error(f"observe_step({device_id}): {e!r}")
@@ -351,7 +404,10 @@ class FleetScheduler:
                              f" got {priority!r}")
         name = workload.name
         old = self._tracked.get(name)
+        old_dev: Tuple[str, ...] = ()
         if old is not None:
+            if old.device is not None:
+                old_dev = (old.device,)
             self._drop_prices(old.uid)
             old.profile = workload
             old.priority = priority
@@ -367,7 +423,8 @@ class FleetScheduler:
         self._next_uid += 1
         self.stats["arrivals"] += 1
         n0 = len(self.decisions)
-        self._replan(f"arrival {name}")
+        self._replan(RepairScope("arrival", f"arrival {name}",
+                                 workloads=(name,), devices=old_dev))
         if t.state == PLACED:
             for d in self.decisions[n0:]:
                 if d.workload == name and d.action in ("placed", "migrated"):
@@ -416,10 +473,13 @@ class FleetScheduler:
         if not items:
             return []
         order: List[str] = []
+        old_devs: List[str] = []
         for workload, priority, train_meta in items:
             name = workload.name
             old = self._tracked.get(name)
             if old is not None:
+                if old.device is not None and old.device not in old_devs:
+                    old_devs.append(old.device)
                 self._drop_prices(old.uid)
                 old.profile = workload
                 old.priority = priority
@@ -436,7 +496,9 @@ class FleetScheduler:
             if name not in order:
                 order.append(name)
         n0 = len(self.decisions)
-        self._replan(f"arrival storm ({len(order)} workloads)")
+        self._replan(RepairScope(
+            "storm", f"arrival storm ({len(order)} workloads)",
+            workloads=tuple(order), devices=tuple(old_devs)))
         batch = set(order)
         placed_dec: Dict[str, AdmissionDecision] = {}
         for d in self.decisions[n0:]:
@@ -481,7 +543,11 @@ class FleetScheduler:
         self._assignment.pop(name, None)
         self.stats["departures"] += 1
         self._decide("removed", t, device=t.device, reason="departure")
-        self._replan(f"departure {name}")
+        # freed capacity: waiting workloads get another shot; the
+        # departed workload's device re-prices its shrunken group
+        self._replan(RepairScope(
+            "departure", f"departure {name}", workloads=self._waiting(),
+            devices=(t.device,) if t.device is not None else ()))
 
     # ----------------------------- event loop ---------------------- #
     def tick(self, now: Optional[float] = None) -> None:
@@ -493,19 +559,27 @@ class FleetScheduler:
             dead = [w for w in self.heartbeats.dead_workers(now)
                     if w in self.devices
                     and self.devices[w].state != D_DEAD]
+            displaced: List[str] = []
             for did in dead:
+                displaced.extend(self._residents(did))
                 self._mark_dead(self.devices[did],
                                 reason=f"missed heartbeat for "
                                        f">{self.cfg.heartbeat_timeout:.1f}s")
             retry_due = frozenset(
                 n for n, t in self._tracked.items()
                 if t.state == QUEUED and t.next_retry <= now)
+            scope = None
             if dead:
-                self._replan("device failure: " + ", ".join(dead),
-                             retry_due=retry_due)
-            elif retry_due:
-                self._replan("retry " + ", ".join(sorted(retry_due)),
-                             retry_due=retry_due)
+                scope = RepairScope("device-dead",
+                                    "device failure: " + ", ".join(dead),
+                                    workloads=tuple(displaced))
+            if retry_due:
+                retry = RepairScope("retry",
+                                    "retry " + ", ".join(sorted(retry_due)),
+                                    workloads=tuple(sorted(retry_due)))
+                scope = retry if scope is None else scope.merge(retry)
+            if scope is not None:
+                self._replan(scope, retry_due=retry_due)
         except Exception as e:
             self._error(f"tick: {e!r}")
 
@@ -523,36 +597,17 @@ class FleetScheduler:
         ok = (D_HEALTHY,) if priority == SLO else (D_HEALTHY, D_DEGRADED)
         return [d for d in self.devices.values() if d.state in ok]
 
-    def _replay(self):
-        """The deterministic assignment: priority classes in order,
-        arrival order within a class, each workload placed on the
-        max-gain feasible device (earliest on ties) or left unplaced.
-        Pure function of (tracked pool, device states, prices)."""
-        assign: Dict[str, List[_Tracked]] = {
-            d.device_id: [] for d in self.devices.values()
-            if d.state != D_DEAD}
-        info: Dict[str, _Price] = {}
-        unplaced: List[_Tracked] = []
-        order = sorted(self._tracked.values(),
-                       key=lambda t: _PRIORITY_RANK[t.priority])
-        for t in order:
-            cands = [d for d in self._live(t.priority)
-                     if len(assign[d.device_id]) < self.cfg.max_group_size]
-            groups = [sorted(assign[d.device_id] + [t],
-                             key=lambda x: x.pos) for d in cands]
-            prices = self._price([(d.model, g)
-                                  for d, g in zip(cands, groups)])
-            best = None
-            for di, (gain, meets, _, _) in enumerate(prices):
-                if meets and (best is None or gain > best[0]):
-                    best = (gain, di)
-            if best is None:
-                unplaced.append(t)
-            else:
-                d = cands[best[1]]
-                assign[d.device_id].append(t)
-                info[d.device_id] = prices[best[1]]
-        return assign, info, unplaced
+    def _waiting(self) -> Tuple[str, ...]:
+        """Names waiting for capacity (queued or final-degraded) — the
+        workload scope of every capacity-increasing mutation."""
+        return tuple(n for n, t in self._tracked.items()
+                     if t.state in (QUEUED, DEGRADED))
+
+    def _residents(self, device_id: str) -> Tuple[str, ...]:
+        """Names currently assigned to a device (by the last replan)."""
+        return tuple(t.profile.name
+                     for t in self._groups.get(device_id, ())
+                     if t.profile.name in self._tracked)
 
     def _price(self, items: List[Tuple[DeviceModel, List[_Tracked]]]
                ) -> List[_Price]:
@@ -576,7 +631,7 @@ class FleetScheduler:
                 if len(g) == 1:
                     w = g[0].profile
                     price = (1.0, True, {w.name: 1.0}, {})
-                    self._price_cache[key] = price
+                    self._cache_price(key, price)
                     for i in idxs:
                         out[i] = price
                 else:
@@ -618,9 +673,9 @@ class FleetScheduler:
                 [w.total_time(model) for w in members],
                 [slows[w.name] for w in members],
                 [w.slo_slowdown for w in members])
-            self._price_cache[key] = (gain, meets,
-                                      {n: float(s) for n, s in slows.items()},
-                                      {})
+            self._cache_price(key, (gain, meets,
+                                    {n: float(s) for n, s in slows.items()},
+                                    {}))
             if not meets and self.cfg.allow_partition:
                 failing.append((key, members))
         if failing:
@@ -630,47 +685,68 @@ class FleetScheduler:
             for (key, members), res in zip(failing, found):
                 if res.meets_slo:
                     names = [w.name for w in members]
-                    self._price_cache[key] = (
+                    self._cache_price(key, (
                         float(res.gain), True,
                         {n: float(s) for n, s in res.slowdowns.items()},
-                        dict(zip(names, map(float, res.fractions))))
+                        dict(zip(names, map(float, res.fractions)))))
 
     def _rep(self, t: _Tracked, model: DeviceModel) -> KernelProfile:
         key = (t.uid, model.name)
         rep = self._reps.get(key)
         if rep is None:
             rep = self._reps[key] = t.profile.representative_kernel(model)
+            self._uid_rep_keys.setdefault(t.uid, set()).add(key)
         return rep
 
+    def _cache_price(self, key: Tuple[str, Tuple[int, ...]],
+                     price: _Price) -> None:
+        """Insert into the price cache, maintaining the uid -> keys
+        reverse index that makes departures O(keys touched)."""
+        self._price_cache[key] = price
+        for uid in key[1]:
+            self._uid_price_keys.setdefault(uid, set()).add(key)
+
     def _drop_prices(self, uid: int) -> None:
-        for key in [k for k in self._price_cache if uid in k[1]]:
-            del self._price_cache[key]
-        for key in [k for k in self._reps if k[0] == uid]:
-            del self._reps[key]
+        # .pop(key, None): a key may already be gone when a group-mate's
+        # earlier departure dropped the shared entry
+        for key in self._uid_price_keys.pop(uid, ()):
+            self._price_cache.pop(key, None)
+        for key in self._uid_rep_keys.pop(uid, ()):
+            self._reps.pop(key, None)
 
     # ----------------------------- replanning ---------------------- #
-    def _replan(self, reason: str,
+    def _replan(self, scope: RepairScope,
                 retry_due: frozenset = frozenset()) -> None:
-        """Recompute the assignment, record every transition as a
-        decision, update lifecycle states, and sync per-device
-        schedulers.  Guarded: never raises (the no-crash contract)."""
+        """Route one mutation's scope through the RepairPlanner, apply
+        the result, and record the repair.  Guarded: never raises (the
+        no-crash contract)."""
         self.stats["replans"] += 1
+        t0 = time.perf_counter()
         try:
-            assign, info, unplaced = self._replay()
-            self._apply_replay(assign, info, unplaced, reason, retry_due)
+            res = self.planner.plan(scope, retry_due)
+            self._apply(res, scope.reason, retry_due)
+            self.repairs.append(RepairRecord(
+                kind=scope.kind, reason=scope.reason, full=res.full,
+                targets=len(res.targets),
+                devices_touched=len(res.touched),
+                latency_s=time.perf_counter() - t0))
         except Exception as e:
-            self._error(f"replan ({reason}): {e!r}")
+            self._error(f"replan ({scope.reason}): {e!r}")
 
-    def _apply_replay(self, assign, info, unplaced, reason,
-                      retry_due) -> None:
+    def _apply(self, res: RepairResult, reason: str, retry_due) -> None:
+        """The thin apply layer: record every lifecycle transition the
+        computed assignment implies, then merge it into fleet state —
+        wholesale for a full replay, as a delta for a scoped repair."""
         now = self.clock()
-        new_assignment = {t.profile.name: did
-                          for did, members in assign.items()
-                          for t in members}
-        unplaced_names = {t.profile.name for t in unplaced}
-        for name, t in self._tracked.items():
+        if res.full:
+            scan = list(self._tracked.items())
+        else:
+            scan = [(n, self._tracked[n]) for n in res.targets
+                    if n in self._tracked]
+        unplaced_names = {t.profile.name for t in res.unplaced}
+        for name, t in scan:
             old = self._assignment.get(name)
-            new = new_assignment.get(name)
+            new = res.placement.get(name)
             if new is not None:
                 if old is None:
                     self._decide("placed", t, device=new, reason=reason)
@@ -680,6 +756,8 @@ class FleetScheduler:
                                  reason=f"{reason}; was on {old}")
                 t.state, t.device = PLACED, new
                 t.retries, t.next_retry = 0, 0.0
+                if not res.full:
+                    self._assignment[name] = new
             elif name in unplaced_names:
                 if old is not None:
                     # displaced from a placement it held
@@ -690,6 +768,8 @@ class FleetScheduler:
                     t.retries = 0
                     t.next_retry = now + self.cfg.backoff_base
                     self._decide(action, t, device=old, reason=reason)
+                    if not res.full:
+                        self._assignment.pop(name, None)
                 elif t.state == QUEUED and name in retry_due:
                     t.retries += 1
                     self.stats["retries"] += 1
@@ -706,10 +786,27 @@ class FleetScheduler:
                             "retry-failed", t,
                             reason=f"{reason}; backoff "
                                    f"{t.next_retry - now:.1f}s")
-        self._assignment = new_assignment
-        self._groups = assign
-        self._info = info
-        self._sync_devices(assign)
+        if res.full:
+            self._assignment = dict(res.placement)
+            self._groups = res.assign
+            self._info = {did: p for did, p in res.info.items()
+                          if p is not None}
+            self._sync_devices(res.assign)
+        else:
+            for did, members in res.assign.items():
+                self._groups[did] = members
+                p = res.info.get(did)
+                if members and p is not None:
+                    self._info[did] = p
+                else:
+                    self._info.pop(did, None)
+            # a scoped apply never rebuilds _groups wholesale, so dead
+            # devices' stale entries must be pruned explicitly
+            for did in [d for d in self._groups
+                        if self.devices[d].state == D_DEAD]:
+                self._groups.pop(did, None)
+                self._info.pop(did, None)
+            self._sync_devices(res.assign)
 
     def _sync_devices(self, assign: Dict[str, List[_Tracked]]) -> None:
         """Mirror the assignment into each device's ColocationScheduler

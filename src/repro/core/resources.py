@@ -77,6 +77,27 @@ TPU_V5E = DeviceModel(
 )
 
 # --------------------------------------------------------------------- #
+#  TPU v5p — the training-class sibling: ~2.3x v5e on compute and        #
+#  ~3.4x on HBM bandwidth, two TensorCores per chip, double the VMEM —   #
+#  the second model of the heterogeneous fleet gates (a workload priced  #
+#  on both sees genuinely different cache/bandwidth headroom)            #
+# --------------------------------------------------------------------- #
+TPU_V5P = DeviceModel(
+    name="tpu_v5p",
+    mxu_flops=459e12,           # bf16
+    vpu_flops=459e12 / 16,
+    issue_rate=1.75e9 * 8,
+    hbm_bw=2765e9,
+    l2_bw=2765e9,               # no transparent L2: alias HBM
+    smem_bw=44e12,              # VMEM aggregate across both cores (approx)
+    ici_bw=100e9,               # per link, 3D torus
+    hbm_capacity=95e9,
+    cache_capacity=256e6,       # VMEM aggregate (2 TensorCores)
+    n_slots=2,                  # two TensorCores per chip (v5p)
+    clock_hz=1.75e9,
+)
+
+# --------------------------------------------------------------------- #
 #  NVIDIA H100 NVL — used to validate against the paper's measurements   #
 # --------------------------------------------------------------------- #
 H100 = DeviceModel(
@@ -110,7 +131,8 @@ RTX3090 = DeviceModel(
     clock_hz=1.695e9,
 )
 
-DEVICES: Dict[str, DeviceModel] = {d.name: d for d in (TPU_V5E, H100, RTX3090)}
+DEVICES: Dict[str, DeviceModel] = {d.name: d for d in (TPU_V5E, TPU_V5P,
+                                                       H100, RTX3090)}
 
 
 def fp64_pipe(dev: DeviceModel) -> float:

@@ -50,6 +50,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.backend import warmup_solver
 from repro.core.estimator import FRACTION_FLOOR, solve_batch, solve_scenarios
 from repro.core.fracsearch import (LEGACY_SEARCH, FractionSearchConfig,
                                    group_metrics, member_slowdowns,
@@ -342,7 +343,8 @@ class ColocationScheduler:
 
     def __init__(self, dev: DeviceModel, max_group_size: int = 2,
                  allow_partition: bool = True,
-                 fraction_search: Optional[FractionSearchConfig] = None):
+                 fraction_search: Optional[FractionSearchConfig] = None,
+                 warmup: bool = False):
         if max_group_size < 2:
             raise ValueError("max_group_size must be >= 2")
         self.dev = dev
@@ -352,6 +354,10 @@ class ColocationScheduler:
         # on numpy; the denser DENSE_SEARCH grid on the jax backend);
         # LEGACY_SEARCH reproduces the seed's fixed grid
         self.search = fraction_search or FractionSearchConfig.default()
+        if warmup:
+            # opt-in AOT compile of the jax solver's common shapes (K up
+            # to the group width this scheduler prices; no-op on numpy)
+            warmup_solver(dev, ks=range(2, self.max_group_size + 1))
         self._works: Dict[str, WorkloadProfile] = {}   # insertion-ordered
         self._uid: Dict[str, int] = {}
         self._next_uid = 0
@@ -645,6 +651,79 @@ class ColocationScheduler:
             placed[group] = True
         solo = sorted(names[i] for i in np.flatnonzero(~placed))
         return Plan(placements, solo)
+
+    def place_candidates(self, workload: WorkloadProfile) -> List[Placement]:
+        """Price ``workload`` against this device's CURRENT placement —
+        without mutating any scheduler state — and return one candidate
+        ``Placement`` per way it could land here: each current group
+        with an open slot, each solo resident, plus running alone on the
+        device (gain 1.0, always last among equals).  Candidates are
+        sorted by gain descending (stable: current-plan order on ties);
+        infeasible joins are included with ``meets_slo=False`` so a
+        caller can see WHY a device was rejected.
+
+        This is the per-device incremental entry point fleet-level
+        repair planning needs: "what would adding this workload to this
+        device cost?" answered from the resident groups the cached plan
+        already holds, with one batched solve over the probe scenarios
+        (and one batched fraction search over SLO-failing joins when
+        ``allow_partition``).  The probe workload is NOT admitted and
+        nothing is cached under its name — ``submit()`` it to accept a
+        candidate.  Raises ``ValueError`` if the name is already
+        resident (re-pricing a resident is a resubmit, not a probe)."""
+        if workload.name in self._works:
+            raise ValueError(f"already resident: {workload.name!r}")
+        plan = self.plan()      # prices any never-seen pairs, from cache
+        host_groups: List[List[WorkloadProfile]] = []
+        for p in plan.placements:
+            if len(p.workloads) < self.max_group_size:
+                host_groups.append([self._works[n] for n in p.workloads])
+        for n in plan.solo:
+            host_groups.append([self._works[n]])
+        reps = {n: self._rep(n) for g in host_groups for w in g
+                for n in (w.name,)}
+        reps[workload.name] = workload.representative_kernel(self.dev)
+        cand = [g + [workload] for g in host_groups]
+        scenarios: List[Scenario] = []
+        for g in cand:
+            scenarios.extend(group_victim_scenarios(g, reps,
+                                                    device=self.dev))
+        out: List[Placement] = []
+        failing: List[int] = []
+        if scenarios:
+            br = solve_scenarios(scenarios, self.dev)
+            self.stats["scenarios_solved"] += len(scenarios)
+            row = 0
+            for g in cand:
+                n_rows = sum(len(w.kernels) for w in g)
+                slows = member_slowdowns(g, self.dev,
+                                         br.slowdowns[row:row + n_rows, 0])
+                row += n_rows
+                gain, meets = group_metrics(
+                    [w.total_time(self.dev) for w in g],
+                    [slows[w.name] for w in g],
+                    [w.slo_slowdown for w in g])
+                out.append(Placement(
+                    [w.name for w in g], {},
+                    {n: float(s) for n, s in slows.items()},
+                    bool(meets), float(gain)))
+                if not meets:
+                    failing.append(len(out) - 1)
+        if failing and self.allow_partition:
+            found = search_group_fractions([cand[i] for i in failing],
+                                           self.dev, self.search, reps=reps,
+                                           stats=self.stats)
+            for i, r in zip(failing, found):
+                if r.meets_slo:
+                    names = [w.name for w in cand[i]]
+                    out[i] = Placement(
+                        names, dict(zip(names, map(float, r.fractions))),
+                        {n: float(s) for n, s in r.slowdowns.items()},
+                        True, float(r.gain))
+        out.append(Placement([workload.name], {}, {workload.name: 1.0},
+                             True, 1.0))
+        out.sort(key=lambda p: -p.throughput_gain)
+        return out
 
     def _grow(self, works, uids, placed, group, slows, gain, fractions):
         """Greedy group growth: add the unplaced workload that most

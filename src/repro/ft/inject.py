@@ -57,7 +57,8 @@ class InjectEvent:
     """One scripted event: fires the first tick whose time reaches ``t``.
 
     kinds: "arrive" (workload, priority, train_meta), "depart" (name),
-    "kill" (device), "slow" (device, baseline, factor, steps).
+    "kill" (device), "revive" (device), "slow" (device, baseline,
+    factor, steps).
     """
     t: float
     kind: str
@@ -86,6 +87,13 @@ def kill(t: float, device: str) -> InjectEvent:
     """Device failure: the device stops heartbeating at ``t``; the fleet
     declares it dead once the heartbeat timeout elapses."""
     return InjectEvent(t, "kill", {"device": device})
+
+
+def revive(t: float, device: str) -> InjectEvent:
+    """The host comes back: the device resumes heartbeating at ``t``.
+    If the fleet already declared it dead, the next beat revives it
+    (a capacity-scoped replan re-places waiting workloads)."""
+    return InjectEvent(t, "revive", {"device": device})
 
 
 def slow(t: float, device: str, baseline: float = 1.0, factor: float = 8.0,
@@ -138,6 +146,9 @@ class FaultInjector:
             self.fleet.remove(p["name"])
         elif ev.kind == "kill":
             self.killed.add(p["device"])
+        elif ev.kind == "revive":
+            self.killed.discard(p["device"])
+            self.fleet.heartbeat(p["device"])
         elif ev.kind == "slow":
             dev = p["device"]
             n0 = self._step_no.get(dev, 0)

@@ -160,6 +160,15 @@ def compute_report(trace, records: List[RequestRecord], fleet, now: float,
             "migrations": fleet.stats["migrated"],
             "displaced": fleet.stats["displaced"],
             "replans": fleet.stats["replans"],
+            # scoped-repair accounting (repair latencies are wall-clock
+            # and deliberately NOT reported — touched counts are the
+            # deterministic width metric)
+            "scoped_repairs": fleet.stats.get("scoped_repairs", 0),
+            "full_replays": fleet.stats.get("full_replays", 0),
+            "repair_fallbacks": fleet.stats.get("repair_fallbacks", 0),
+            "repair_touched_p95": _pct(
+                [float(r.devices_touched)
+                 for r in getattr(fleet, "repairs", [])], 95),
             "device_deaths": fleet.stats["device_deaths"],
             "event_loop_errors": fleet.stats["errors"],
             "rejected_arrivals": fleet.stats["rejected"],

@@ -237,3 +237,44 @@ def test_default_search_config_follows_backend():
     coarse8 = set(simplex_candidates(2, 8))
     coarse16 = set(simplex_candidates(2, 16))
     assert coarse8 <= coarse16
+
+
+def test_warmup_compiles_each_shape_once_shared_across_models():
+    """warmup() AOT-compiles each requested (bucket, K) shape exactly
+    once; re-warming is free, a different device model hits the same
+    traces (capacities are traced operands), and a real solve of a
+    warmed shape adds no trace."""
+    from repro.core import TPU_V5P
+    # K=11 is unique to this test (the jit cache is process-global)
+    with solver_backend("jax"):
+        assert estimator_jax.warmup(DEV, ks=(11,)) == 1
+        assert estimator_jax.warmup(DEV, ks=(11,)) == 0
+        assert estimator_jax.warmup(TPU_V5P, ks=(11,)) == 0
+        rng = np.random.default_rng(21)
+        pm = ProfileMatrix.from_profiles(pool(rng, 12))
+        t0 = estimator_jax.trace_count()
+        solve_batch(pm, rng.integers(0, 12, (5, 11)), DEV)  # bucket 8
+        assert estimator_jax.trace_count() == t0
+
+
+def test_scheduler_warmup_flag_precompiles_group_widths():
+    """ColocationScheduler(warmup=True) warms every group width up to
+    max_group_size at construction, so the first plan's solves of any
+    warmed shape compile nothing."""
+    from repro.core import ColocationScheduler
+    # max_group_size=12 -> K=12 is unique to this test
+    with solver_backend("jax"):
+        ColocationScheduler(DEV, max_group_size=12, warmup=True)
+        rng = np.random.default_rng(23)
+        ps = pool(rng, 12)
+        t0 = estimator_jax.trace_count()
+        solve_scenarios([Scenario(tuple(ps))], DEV)   # width 12, bucket 8
+        assert estimator_jax.trace_count() == t0
+
+
+def test_warmup_solver_is_noop_on_numpy_backend():
+    """The backend-level switch: warmup_solver never imports or traces
+    anything when the numpy solver is active."""
+    from repro.core import warmup_solver
+    with solver_backend("numpy"):
+        assert warmup_solver(DEV, ks=(2, 3)) == 0

@@ -290,10 +290,10 @@ def test_event_loop_never_raises():
     fleet, _ = make_fleet(n_devices=1)
     fleet.submit(decodes[0], priority=SLO)
 
-    def boom():
+    def boom(scope, retry_due=frozenset()):
         raise RuntimeError("injected bug")
 
-    fleet._replay = boom
+    fleet.planner.plan = boom
     fleet.tick(now=1e9)                      # forces a dead-device replan
     errors = [d for d in fleet.decisions if d.action == "error"]
     assert errors and fleet.stats["errors"] >= 1
@@ -372,3 +372,47 @@ def test_injector_batches_same_tick_storm():
         on_tick=lambda f, now: replans_at.setdefault(now, f.stats["replans"])
     ).run(trace, until=3.0)
     assert replans_at[1.0] - replans_at[0.0] == 1
+
+
+# ------------------------------------------------------------------ #
+#  price-cache reverse index (departures are O(keys touched))        #
+# ------------------------------------------------------------------ #
+def test_drop_prices_clears_caches_via_reverse_index():
+    """Removing a workload must purge every cached price and
+    representative involving its uid — through the uid -> keys reverse
+    index, not a full cache scan — and leave group-mates' other entries
+    intact."""
+    decodes, auxes = mix(n_decode=2, n_aux=2)
+    fleet, _ = make_fleet(n_devices=2)
+    for d in decodes:
+        fleet.submit(d, priority=SLO)
+    for a in auxes:
+        fleet.submit(a, priority=BEST_EFFORT)
+    victim = decodes[0].name
+    uid = fleet._tracked[victim].uid
+    assert uid in fleet._uid_price_keys
+    assert any(uid in key[1] for key in fleet._price_cache)
+    fleet.remove(victim)
+    # reverse index entries gone...
+    assert uid not in fleet._uid_price_keys
+    assert uid not in fleet._uid_rep_keys
+    # ...and no cache entry references the departed uid any more
+    assert not any(uid in key[1] for key in fleet._price_cache)
+    assert not any(key[0] == uid for key in fleet._reps)
+    # survivors keep their cached prices (the replan after removal
+    # reprices from a warm cache, not from scratch)
+    live_uids = {t.uid for t in fleet._tracked.values()}
+    assert any(set(key[1]) <= live_uids for key in fleet._price_cache)
+
+
+def test_drop_prices_shared_key_double_drop():
+    """Two group-mates share cached group keys; removing both must not
+    raise when the second drop hits keys the first already purged."""
+    decodes, _ = mix(n_decode=2, n_aux=0)
+    fleet, _ = make_fleet(n_devices=1)
+    for d in decodes:
+        fleet.submit(d, priority=SLO)
+    fleet.remove(decodes[0].name)
+    fleet.remove(decodes[1].name)       # must not KeyError
+    assert len(fleet) == 0
+    assert fleet._uid_price_keys == {} and fleet._uid_rep_keys == {}

@@ -1,0 +1,174 @@
+"""Scoped repair: the bounded-divergence contract, property-tested.
+
+The ``RepairPlanner`` replaces the fleet's replay-everything loop with
+scope-local repair.  Its contract (src/repro/core/repair.py):
+
+  * after ANY mutation sequence, the online fleet's total packed gain is
+    >= (1 - divergence_epsilon) x a cold full replay over the same pool
+    and surviving devices;
+  * the SET of placed SLO workloads matches that cold replay exactly
+    (the SLO-fallback rule: scoped repair refuses to be the one that
+    queues an SLO tenant);
+  * fleets too small for any scope to be local (the default thresholds)
+    take the full-replay path every time — the legacy online == cold at
+    1e-9 behavior is bit-preserved there.
+
+These are *property* tests: random mutation sequences (arrivals,
+departures, decommissions, revives) over several seeds on a 24-device
+heterogeneous (v5e/v5p) fleet, with ``full_replay_fraction=1.0`` so the
+scoped path is always taken — the adversarial regime for divergence.
+"""
+import sys
+from dataclasses import replace
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "benchmarks"))
+from bench_fleet import cold_fleet, fleet_plans_equal  # noqa: E402
+
+from repro.core import (BEST_EFFORT, SLO, TPU_V5E, TPU_V5P,  # noqa: E402
+                        FleetConfig, FleetScheduler, KernelProfile,
+                        RepairScope, WorkloadProfile)
+from repro.core.resources import RESOURCE_AXES  # noqa: E402
+from repro.ft.inject import FakeClock  # noqa: E402
+
+N_DEV = 24
+SCOPED_CFG = FleetConfig(max_group_size=3, queue_limit=64,
+                         heartbeat_timeout=1e9,
+                         full_replay_fraction=1.0, repair_probe=4)
+
+
+def hetero_models(n=N_DEV):
+    return {f"dev{i:02d}": (TPU_V5E if i % 2 == 0 else TPU_V5P)
+            for i in range(n)}
+
+
+def rand_workload(rng, name, slo=1.5):
+    """Moderate-demand workload: heavier on one randomly chosen axis so
+    groups contend mildly, loose 1.5x SLO so full-share triples pass."""
+    lean = ("mxu", "hbm")[int(rng.integers(2))]
+    u = {"mxu": 0.10, "vpu": 0.04, "issue": 0.05, "hbm": 0.10, "l2": 0.10}
+    u[lean] = float(rng.uniform(0.25, 0.45))
+    if lean == "hbm":
+        u["l2"] = u["hbm"]
+    d = {r: u.get(r, 0.0) * TPU_V5E.capacity(r) for r in RESOURCE_AXES}
+    return WorkloadProfile(
+        name, (KernelProfile(f"{name}#step", demand=d, duration=1.0),),
+        slo_slowdown=slo)
+
+
+def cold_of(fleet, cfg):
+    """Cold FULL replay over the online fleet's pool and surviving
+    devices: one batched storm through a repair_mode="full" twin is
+    exactly one deterministic cold replay."""
+    survivors = {did: d.model for did, d in fleet.devices.items()
+                 if d.state != "dead"}
+    cold = FleetScheduler(survivors, replace(cfg, repair_mode="full"))
+    cold.submit_many([(p, prio) for p, prio in fleet.workloads])
+    return cold
+
+
+def run_mutations(seed, steps=40):
+    """One random mutation sequence; returns the online fleet."""
+    rng = np.random.default_rng(seed)
+    clock = FakeClock()
+    fleet = FleetScheduler(hetero_models(), SCOPED_CFG, clock=clock)
+    pool = []
+    next_id = 0
+    for _ in range(steps):
+        op = float(rng.random())
+        if op < 0.55 or not pool:
+            w = rand_workload(rng, f"w{next_id}")
+            next_id += 1
+            fleet.submit(w, priority=SLO if rng.random() < 0.5
+                         else BEST_EFFORT)
+            pool.append(w.name)
+        elif op < 0.82:
+            name = pool.pop(int(rng.integers(len(pool))))
+            if name in fleet:
+                fleet.remove(name)
+        elif op < 0.92:
+            live = [did for did, d in fleet.devices.items()
+                    if d.state == "healthy"]
+            if len(live) > N_DEV // 2:
+                fleet.decommission(live[int(rng.integers(len(live)))])
+        else:
+            dead = [did for did, d in fleet.devices.items()
+                    if d.state == "dead"]
+            if dead:
+                fleet.heartbeat(dead[int(rng.integers(len(dead)))])
+        clock.advance(1.0)
+    return fleet
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_random_mutations_bounded_divergence(seed):
+    """After a random mutation sequence under always-scoped repair, the
+    online gain is within epsilon of cold and the SLO sets match."""
+    fleet = run_mutations(seed)
+    assert fleet.stats["errors"] == 0
+    assert fleet.stats["scoped_repairs"] > 0   # the scoped path actually ran
+    plan = fleet.plan()
+    cplan = cold_of(fleet, SCOPED_CFG).plan()
+    eps = SCOPED_CFG.divergence_epsilon
+    assert plan.total_gain >= (1.0 - eps) * cplan.total_gain - 1e-9, (
+        f"divergence contract broken: online {plan.total_gain:.6f} < "
+        f"(1-{eps}) x cold {cplan.total_gain:.6f}")
+    slo_names = {p.name for p, prio in fleet.workloads if prio == SLO}
+    online_slo = {n for n in slo_names if n in plan.placed}
+    cold_slo = {n for n in slo_names if n in cplan.placed}
+    assert online_slo == cold_slo
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_scoped_repairs_touch_few_devices(seed):
+    """Scoped repairs stay local: every non-full repair touches at most
+    scope devices + probe + displaced groups, far below the fleet."""
+    fleet = run_mutations(seed)
+    scoped = [r for r in fleet.repairs if not r.full]
+    assert scoped
+    assert max(r.devices_touched for r in scoped) < N_DEV
+
+
+def test_small_fleet_defaults_bit_preserve_full_replay():
+    """With the default thresholds a 4-device fleet can never pass the
+    locality test, so EVERY replan is a full replay and the historical
+    online == cold at 1e-9 contract holds bit-for-bit."""
+    cfg = FleetConfig(max_group_size=3, heartbeat_timeout=1e9)
+    models = {f"dev{i}": TPU_V5E for i in range(4)}
+    fleet = FleetScheduler(models, cfg, clock=FakeClock())
+    rng = np.random.default_rng(7)
+    for i in range(8):
+        fleet.submit(rand_workload(rng, f"w{i}"),
+                     priority=SLO if i % 2 == 0 else BEST_EFFORT)
+    fleet.remove("w2")
+    assert fleet.stats["replans"] == fleet.stats["full_replays"]
+    assert fleet.stats["scoped_repairs"] == 0
+    cold = cold_fleet(fleet, models, cfg)
+    assert fleet_plans_equal(fleet.plan(), cold.plan())
+
+
+def test_forced_full_mode_never_scopes():
+    """repair_mode="full" routes every mutation through the cold replay
+    even when the scope would be local."""
+    fleet = FleetScheduler(hetero_models(8),
+                           replace(SCOPED_CFG, repair_mode="full"),
+                           clock=FakeClock())
+    rng = np.random.default_rng(3)
+    for i in range(4):
+        fleet.submit(rand_workload(rng, f"w{i}"))
+    assert fleet.stats["scoped_repairs"] == 0
+    assert fleet.stats["replans"] == fleet.stats["full_replays"]
+
+
+def test_scope_merge_unions_and_full_wins():
+    a = RepairScope("device-dead", "dev down", workloads=("a", "b"),
+                    devices=("d0",))
+    b = RepairScope("retry", "retry c", workloads=("b", "c"),
+                    devices=("d1",))
+    m = a.merge(b)
+    assert m.workloads == ("a", "b", "c") and m.devices == ("d0", "d1")
+    assert m.kind == "device-dead+retry"
+    assert a.merge(RepairScope.full("oops")).kind == "full"

@@ -300,3 +300,78 @@ def test_max_group_size_validation():
         ColocationScheduler(TPU_V5E, max_group_size=1)
     with pytest.raises(KeyError):
         ColocationScheduler(TPU_V5E).remove("ghost")
+
+
+# ------------------------------------------------------------------ #
+#  place_candidates: the non-mutating per-device probe               #
+# ------------------------------------------------------------------ #
+def test_place_candidates_matches_evaluate_group_oracle():
+    """Every full-share join candidate's gain/slowdowns must equal the
+    scalar evaluate_group twin on the same member set at 1e-9."""
+    rng = np.random.default_rng(11)
+    works = random_workloads(rng, 5, TPU_V5E)
+    probe = random_workloads(rng, 7, TPU_V5E)[6]
+    s = cold(works, k=3)
+    by_name = {w.name: w for w in works}
+    by_name[probe.name] = probe
+    for p in s.place_candidates(probe):
+        if len(p.workloads) == 1 or p.slot_fraction:
+            continue            # solo sentinel / partition-rescued join
+        want = evaluate_group([by_name[n] for n in p.workloads], TPU_V5E)
+        assert abs(p.throughput_gain - want.throughput_gain) <= 1e-9
+        assert p.meets_slo == want.meets_slo
+        for n in p.workloads:
+            assert abs(p.predicted_slowdown[n]
+                       - want.predicted_slowdown[n]) <= 1e-9
+
+
+def test_place_candidates_is_pure_probe():
+    """The probe admits nothing: the resident pool, the plan, and the
+    caches keyed by the probe's name stay untouched."""
+    rng = np.random.default_rng(12)
+    works = random_workloads(rng, 4, TPU_V5E)
+    probe = random_workloads(rng, 6, TPU_V5E)[5]
+    s = cold(works, k=3)
+    before_plan = s.plan()
+    before = s.snapshot()
+    cands = s.place_candidates(probe)
+    after = s.snapshot()
+    assert probe.name not in s
+    assert after["workloads"] == before["workloads"]
+    assert after["cached_pairs"] == before["cached_pairs"]
+    assert after["cached_groups"] == before["cached_groups"]
+    assert_plans_equal(s.plan(), before_plan)
+    # sorted by gain descending, solo sentinel always present
+    gains = [p.throughput_gain for p in cands]
+    assert gains == sorted(gains, reverse=True)
+    solo = [p for p in cands if list(p.workloads) == [probe.name]]
+    assert len(solo) == 1 and solo[0].meets_slo
+    assert solo[0].throughput_gain == 1.0
+
+
+def test_place_candidates_partition_rescues_failing_join():
+    """A join that misses SLO at full share but passes under the slot-
+    fraction search must surface as a feasible partitioned candidate;
+    with allow_partition=False the same join stays infeasible (visible
+    with meets_slo=False, never silently dropped)."""
+    from bench_planner import decode_heavy_mix
+    d0, d1 = decode_heavy_mix(TPU_V5E, n_decode=2, n_aux=0)
+    full = evaluate_group([d0, d1], TPU_V5E)
+    assert not full.meets_slo          # the gate mix: pair fails shared
+    s = cold([d0], k=2, allow_partition=True)
+    join = [p for p in s.place_candidates(d1)
+            if set(p.workloads) == {d0.name, d1.name}]
+    assert len(join) == 1
+    assert join[0].meets_slo and join[0].slot_fraction
+    s2 = cold([d0], k=2, allow_partition=False)
+    join2 = [p for p in s2.place_candidates(d1)
+             if set(p.workloads) == {d0.name, d1.name}]
+    assert len(join2) == 1 and not join2[0].meets_slo
+
+
+def test_place_candidates_resident_name_raises():
+    rng = np.random.default_rng(13)
+    works = random_workloads(rng, 3, TPU_V5E)
+    s = cold(works, k=3)
+    with pytest.raises(ValueError):
+        s.place_candidates(works[0])
