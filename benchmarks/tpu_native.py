@@ -20,11 +20,15 @@ Row = Tuple[str, float, str]
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
 
 
-def stressor_suite() -> List[Row]:
+def stressor_suite(repeats: int = 5) -> List[Row]:
     """Wall-time of the Pallas microbenchmark suite (interpret mode on
-    CPU; on TPU the same calls compile to Mosaic)."""
+    CPU; on TPU the same calls compile to Mosaic).  Each kernel is timed
+    ``repeats`` times through the shared ``median_iqr_time`` timer
+    (median + IQR — one outlier dispatch no longer skews the row; the
+    calib Pallas backend measures with the same timer)."""
     import jax
     import jax.numpy as jnp
+    from repro.calib.measure import median_iqr_time
     from repro.kernels import stressors
 
     rows = []
@@ -39,11 +43,10 @@ def stressor_suite() -> List[Row]:
         ("stress_vmem_stride8", lambda: stressors.stress_vmem(x, iters=8, stride=8, interpret=True)),
     ]
     for name, fn in cases:
-        fn()   # warmup/compile
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        us = (time.perf_counter() - t0) * 1e6
-        rows.append((name, us, "interpret-mode"))
+        med_s, iqr_s = median_iqr_time(fn, repeats=repeats, warmup=1)
+        rows.append((name, med_s * 1e6,
+                     f"interpret-mode|median_of={repeats}"
+                     f"|iqr_us={iqr_s * 1e6:.1f}"))
     return rows
 
 

@@ -1,0 +1,47 @@
+"""repro.calib — measured-profile calibration: close the model-to-hardware loop.
+
+The paper's core contribution is *measuring* per-resource interference
+sensitivity; this package turns the repo's analytic KernelProfiles into
+fitted, validated, drift-monitored ones:
+
+    measure  →  fit  →  validate  →  monitor  →  re-fit
+  (calib.measure) (calib.fit) (calib.validate) (calib.drift)
+
+* ``measure`` runs the §4 stressor×victim sweep behind a pluggable
+  backend (deterministic ``SyntheticBackend`` for CI, ``PallasBackend``
+  for real colocated kernel runs);
+* ``fit`` inverts the water-filling estimator over the measured
+  slowdown matrix (batched coordinate descent; ``solve_scenarios`` is
+  the forward model on whichever solver backend PR 8's switch selects);
+* ``validate`` scores the fit on held-out k-way mixes the fitter never
+  saw;
+* ``drift`` watches predicted-vs-observed slowdown online inside
+  ``FleetScheduler``/``repro.sim`` and re-fits flagged tenants.
+
+CI gate: ``benchmarks/bench_calib.py`` (BENCH_calib.json).
+"""
+from repro.calib.drift import (DriftConfig, DriftMonitor, DriftSample,
+                               scale_workload)
+from repro.calib.fit import (FitConfig, FitReport, fit_kernel, fit_profiles,
+                             fit_report, params_to_profile, perturb_profile,
+                             predict_slowdowns, profile_to_params)
+from repro.calib.measure import (CACHE_WS_FRACTIONS, FIT_LAMBDAS,
+                                 REVERSE_LAMBDAS, Colocation,
+                                 MeasurementSet, PallasBackend,
+                                 StressorSpec, SyntheticBackend,
+                                 colocation_scenario, median_iqr_time,
+                                 sweep_colocations)
+from repro.calib.validate import (HOLDOUT_LAMBDAS, ValidationReport,
+                                  holdout_mixes, validate)
+
+__all__ = [
+    "CACHE_WS_FRACTIONS", "Colocation", "DriftConfig", "DriftMonitor",
+    "DriftSample", "FIT_LAMBDAS", "FitConfig", "FitReport",
+    "HOLDOUT_LAMBDAS", "MeasurementSet", "PallasBackend",
+    "REVERSE_LAMBDAS", "StressorSpec", "SyntheticBackend",
+    "ValidationReport", "colocation_scenario", "fit_kernel",
+    "fit_profiles", "fit_report", "holdout_mixes", "median_iqr_time",
+    "params_to_profile", "perturb_profile", "predict_slowdowns",
+    "profile_to_params", "scale_workload", "sweep_colocations",
+    "validate",
+]

@@ -262,7 +262,9 @@ class FleetScheduler:
             "replans": 0, "scoped_repairs": 0, "full_replays": 0,
             "repair_fallbacks": 0, "scenarios_solved": 0, "groups_priced": 0,
             "errors": 0,
+            "calib_observations": 0, "calib_flags": 0, "calib_refits": 0,
         }
+        self.calib = None                  # DriftMonitor, see repro.calib
         items = devices.items() if isinstance(devices, Mapping) else devices
         for did, model in items:
             self.add_device(did, model)
@@ -384,6 +386,80 @@ class FleetScheduler:
         return {"state": t.state, "device": t.device, "priority": t.priority,
                 "retries": t.retries, "next_retry": t.next_retry,
                 "rescale": t.rescale}
+
+    def profile_of(self, name: str) -> WorkloadProfile:
+        """The fleet's current believed profile for a tracked workload."""
+        return self._tracked[name].profile
+
+    # ----------------------------- calibration --------------------- #
+    def attach_calibration(self, monitor) -> None:
+        """Wire a ``repro.calib.DriftMonitor`` into the event loop:
+        ``observe_slowdown`` feeds it predicted-vs-observed pairs and
+        ``refit_workload`` re-fits flagged tenants from its samples.
+        Counters surface in ``stats`` (calib_observations/flags/refits)."""
+        self.calib = monitor
+
+    def observe_slowdown(self, name: str, observed: float) -> bool:
+        """Report a measured slowdown for a placed workload.  Builds the
+        drift sample's colocation context (group-mate representative
+        kernels, slot fractions, device model) from the live plan and
+        forwards to the attached monitor.  Returns True iff this
+        observation NEWLY flags the workload as drifted.  Event-loop
+        surface: never raises."""
+        try:
+            if self.calib is None:
+                return False
+            t = self._tracked.get(name)
+            if t is None or t.state != PLACED or t.device is None:
+                return False
+            info = self._info.get(t.device)
+            if info is None:
+                return False
+            predicted = info[2].get(name)
+            if predicted is None:
+                return False
+            model = self.devices[t.device].model
+            bg = tuple(self._rep(o, model)
+                       for o in self._groups.get(t.device, ())
+                       if o.profile.name != name)
+            frac = info[3] or None
+            self.stats["calib_observations"] += 1
+            newly = self.calib.observe(name, predicted, float(observed),
+                                       bg, frac, model)
+            if newly:
+                self.stats["calib_flags"] += 1
+                self._decide("calib-flagged", t, device=t.device,
+                             reason=f"observed/predicted diverged "
+                                    f"{self.calib.divergence(name):+.0%} "
+                                    f"(EWMA)")
+            return newly
+        except Exception as e:
+            self._error(f"observe_slowdown {name}: {e!r}")
+            return False
+
+    def refit_workload(self, name: str) -> bool:
+        """Re-fit a drifted workload's profile from the monitor's stored
+        observations and resubmit it (same priority — last-profile-wins,
+        so the fleet replans around the corrected demand).  Returns True
+        iff a refit happened.  Never raises."""
+        try:
+            if self.calib is None:
+                return False
+            t = self._tracked.get(name)
+            if t is None or not self.calib.can_refit(name):
+                return False
+            refit = self.calib.refit(name, t.profile)
+            if refit is None:
+                return False
+            self.stats["calib_refits"] += 1
+            self._decide("calib-refit", t, device=t.device,
+                         reason="profile re-fit from drift observations")
+            self.submit(refit, priority=t.priority,
+                        train_meta=t.train_meta)
+            return True
+        except Exception as e:
+            self._error(f"refit_workload {name}: {e!r}")
+            return False
 
     def submit(self, workload: WorkloadProfile, priority: str = SLO,
                train_meta: Optional[dict] = None) -> AdmissionDecision:
@@ -541,6 +617,8 @@ class FleetScheduler:
         del self._tracked[name]
         self._drop_prices(t.uid)
         self._assignment.pop(name, None)
+        if self.calib is not None:
+            self.calib.forget(name)
         self.stats["departures"] += 1
         self._decide("removed", t, device=t.device, reason="departure")
         # freed capacity: waiting workloads get another shot; the

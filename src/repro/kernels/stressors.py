@@ -11,7 +11,7 @@ custom CUDA benchmark suite (§4.1) adapted per DESIGN.md §2:
                   serialize vector accesses (bank-conflict analogue).
 
 Each returns a checkable value so the interpret-mode oracle tests in
-tests/test_kernels_stressors.py can assert numerics, and each has an
+tests/test_kernels.py can assert numerics, and each has an
 analytic resource-demand vector in ``repro.core.sensitivity`` used by the
 interference estimator.
 """

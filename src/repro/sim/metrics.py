@@ -186,5 +186,13 @@ def compute_report(trace, records: List[RequestRecord], fleet, now: float,
                        for did, d in sorted(fleet.devices.items())},
         },
         "per_tenant": per_tenant,
+        "calib": {
+            "observations": fleet.stats.get("calib_observations", 0),
+            "flags": fleet.stats.get("calib_flags", 0),
+            "refits": fleet.stats.get("calib_refits", 0),
+            "flagged_tenants": sorted(set(
+                getattr(getattr(fleet, "calib", None), "flag_log",
+                        ()) or ())),
+        },
     }
     return report

@@ -36,8 +36,13 @@ from typing import Deque, Dict, Iterable, List, Mapping, Optional, Tuple
 
 import numpy as np
 
+from repro.calib.drift import DriftConfig, DriftMonitor, scale_workload
 from repro.core.fleet import FleetConfig, FleetScheduler
+from repro.core.fracsearch import member_slowdowns
+from repro.core.profile import WorkloadProfile
 from repro.core.resources import DeviceModel
+from repro.core.scenario import group_victim_scenarios
+from repro.core.estimator import solve_scenarios
 from repro.ft.inject import FakeClock, FaultInjector, InjectEvent
 from repro.sim.metrics import RequestRecord, compute_report
 from repro.sim.traces import Trace
@@ -48,6 +53,9 @@ class SimConfig:
     """Simulator knobs (fleet knobs live in ``FleetConfig``)."""
     tick_dt: float = 0.5             # virtual seconds per event-loop tick
     settle: float = 30.0             # drain time after the last event
+    calibrate: bool = True           # attach a repro.calib DriftMonitor
+    refit: bool = True               # re-fit tenants the monitor flags
+    drift: Optional[DriftConfig] = None   # monitor knobs (None = defaults)
 
 
 def default_fleet_config() -> FleetConfig:
@@ -74,6 +82,10 @@ class _TraceInjector(FaultInjector):
             self.applied.append(ev)
         elif ev.kind == "depart":
             self.sim._depart(ev.payload["name"])
+            self.applied.append(ev)
+        elif ev.kind == "profile-shift":
+            self.sim._shift(ev.payload["tenant"],
+                            ev.payload["demand_scale"])
             self.applied.append(ev)
         else:
             super()._apply(ev)
@@ -107,6 +119,14 @@ class Simulator:
         self._plan = None
         self._plan_rev = -1
         self._loc: Dict[str, Tuple[str, float]] = {}
+        # calibration: the tenant's TRUE profile where it diverged from
+        # the fleet's belief (profile-shift events), and the observed
+        # serving slowdown each tick (== predicted while beliefs hold)
+        self.true_profiles: Dict[str, WorkloadProfile] = {}
+        self._obs_serve: Dict[str, float] = {}
+        if self.scfg.calibrate:
+            self.fleet.attach_calibration(
+                DriftMonitor(self.scfg.drift or DriftConfig()))
 
     # ------------------------- event handlers --------------------- #
     def _enqueue(self, ev: InjectEvent) -> None:
@@ -131,8 +151,18 @@ class Simulator:
     def _depart(self, name: str) -> None:
         for rec in self.queues.pop(name, ()):  # cancel outstanding work
             rec.canceled = True
+        self.true_profiles.pop(name, None)
+        self._obs_serve.pop(name, None)
         if name in self.fleet:
             self.fleet.remove(name)
+
+    def _shift(self, name: str, scale: float) -> None:
+        spec = self.trace.tenants.get(name)
+        if spec is None:
+            raise KeyError(f"profile-shift for unknown tenant {name!r} "
+                           "(broken trace)")
+        base = self.true_profiles.get(name, spec.profile)
+        self.true_profiles[name] = scale_workload(base, float(scale))
 
     # --------------------------- serving -------------------------- #
     def _refresh_plan(self) -> None:
@@ -146,10 +176,68 @@ class Simulator:
             for n in p.workloads:
                 self._loc[n] = (did, float(p.predicted_slowdown.get(n, 1.0)))
 
+    # ------------------------- calibration ------------------------ #
+    def _observe_drift(self) -> None:
+        """Per-tick predicted-vs-observed pass over every placed tenant.
+
+        Groups whose members all match the fleet's beliefs observe
+        ``observed == predicted`` exactly (no solve — the plan and the
+        fleet read the same group price), so a clean trace provably
+        produces zero flags.  A group holding a shifted tenant is
+        re-solved with TRUE profiles (same ``group_victim_scenarios`` /
+        ``member_slowdowns`` fold the fleet prices with) and every
+        member's observed slowdown is rebased to the fleet's believed
+        baseline before it reaches the monitor.  Newly flagged tenants
+        re-fit immediately (``SimConfig.refit``) — the resubmit replans,
+        and the next tick serves from the corrected plan."""
+        flagged: List[str] = []
+        for did, p in self._plan.placements.items():
+            if not any(n in self.true_profiles for n in p.workloads):
+                for n in p.workloads:
+                    pred = float(p.predicted_slowdown.get(n, 1.0))
+                    self._obs_serve[n] = pred
+                    if self.fleet.observe_slowdown(n, pred):
+                        flagged.append(n)
+                continue
+            model = self.fleet.devices[did].model
+            members = []
+            for n in p.workloads:
+                spec = self.trace.tenants.get(n)
+                members.append(self.true_profiles.get(
+                    n, spec.profile if spec is not None
+                    else self.fleet.profile_of(n)))
+            reps = {w.name: w.representative_kernel(model)
+                    for w in members}
+            frac = p.slot_fraction or None
+            br = solve_scenarios(
+                group_victim_scenarios(members, reps, frac), model)
+            slows = member_slowdowns(members, model, br.slowdowns[:, 0])
+            for n, true_w in zip(p.workloads, members):
+                spec = self.trace.tenants.get(n)
+                t_true = true_w.total_time(model)
+                believed = self.fleet.profile_of(n)
+                # the monitor compares against the fleet's predicted
+                # slowdown, which is relative to the believed isolated
+                # time; serving compares against the tenant's original
+                # tbt_base — rebase to each baseline
+                obs_fleet = slows[n] * t_true / max(
+                    believed.total_time(model), 1e-12)
+                t_spec = (spec.profile.total_time(model)
+                          if spec is not None else t_true)
+                self._obs_serve[n] = slows[n] * t_true / max(t_spec, 1e-12)
+                if self.fleet.observe_slowdown(n, obs_fleet):
+                    flagged.append(n)
+        if self.scfg.refit:
+            for n in flagged:
+                self.fleet.refit_workload(n)
+
     def _on_tick(self, fleet: FleetScheduler, now: float) -> None:
         """One serving pass over [now, now + tick_dt): every placed
         tenant drains its queue at its interference-inflated rate."""
         self._refresh_plan()
+        if self.fleet.calib is not None:
+            self._observe_drift()
+            self._refresh_plan()       # a refit replans mid-tick
         dt = self.scfg.tick_dt
         for did, p in self._plan.placements.items():
             self.resident_time[did] = (self.resident_time.get(did, 0.0)
@@ -167,6 +255,9 @@ class Simulator:
                 continue               # unplaced: requests age, unserved
             did, slowdown = loc
             spec = self.trace.tenants[tenant]
+            # serve at the OBSERVED rate when calibrating (diverges from
+            # predicted only for shifted tenants' groups)
+            slowdown = self._obs_serve.get(tenant, slowdown)
             tbt_eff = spec.tbt_base * max(slowdown, 1.0)
             budget = dt
             while q and budget > 1e-12:

@@ -75,6 +75,15 @@ def request(t: float, tenant: str, req_id: int, n_tokens: int) -> InjectEvent:
                                       "n_tokens": int(n_tokens)})
 
 
+def profile_shift(t: float, tenant: str, demand_scale: float) -> InjectEvent:
+    """Mid-trace calibration drift: from ``t`` on, ``tenant``'s TRUE
+    resource demand is its profile's scaled by ``demand_scale`` while
+    the fleet keeps believing the original — the drift monitor's job
+    (``repro.calib.drift``) is to notice and trigger a re-fit."""
+    return InjectEvent(t, "profile-shift",
+                       {"tenant": tenant, "demand_scale": float(demand_scale)})
+
+
 @dataclass(frozen=True)
 class TraceConfig:
     """Knobs of one generated trace (all stochastic draws come from the
@@ -104,6 +113,9 @@ class TraceConfig:
                                      # covering scheduling/queueing delay
     kills: Tuple[Tuple[float, str], ...] = ()    # (t, device_id)
     slows: Tuple[Tuple[float, str], ...] = ()    # (t, device_id)
+    # (t, tenant, demand_scale): the tenant's true demand shifts while
+    # the fleet's belief stays — exercises the calib drift monitor
+    profile_shifts: Tuple[Tuple[float, str, float], ...] = ()
 
 
 @dataclass(frozen=True)
@@ -299,4 +311,6 @@ def generate_trace(cfg: TraceConfig,
         events.append(kill(float(t), device))
     for t, device in cfg.slows:
         events.append(slow(float(t), device))
+    for t, tenant, scale in cfg.profile_shifts:
+        events.append(profile_shift(float(t), tenant, scale))
     return Trace(cfg, tenants, events)

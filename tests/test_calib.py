@@ -1,0 +1,387 @@
+"""repro.calib: the measure -> fit -> validate -> drift loop.
+
+Property-tests the synthetic round-trip (seeded random perturbations of
+diverse ground-truth profiles must be recovered to <=5% held-out mix
+error), the drift monitor's flag/refit mechanics, and the sim
+integration (injected mid-trace shift -> flagged + re-fit; clean
+same-seed twin -> zero flags; bit-identical reports).
+"""
+import math
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "benchmarks"))
+
+from repro.calib import (CACHE_WS_FRACTIONS, FIT_LAMBDAS, Colocation,
+                         DriftConfig, DriftMonitor, FitConfig,
+                         MeasurementSet, StressorSpec, SyntheticBackend,
+                         colocation_scenario, fit_profiles, holdout_mixes,
+                         median_iqr_time, perturb_profile,
+                         predict_slowdowns, profile_to_params,
+                         scale_workload, sweep_colocations, validate)
+from repro.core.estimator import solve_scenarios
+from repro.core.profile import KernelProfile, WorkloadProfile
+from repro.core.resources import RESOURCE_AXES, TPU_V5E, TPU_V5P
+from repro.core.scenario import Scenario
+from repro.core.sensitivity import stressor
+from repro.sim import SimConfig, Simulator, TraceConfig, generate_trace
+
+import bench_calib
+
+DEV = TPU_V5E
+
+
+# ------------------------------------------------------------------ #
+#  satellite: the stressor() builder occupies exactly lambda           #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("dev", [TPU_V5E, TPU_V5P],
+                         ids=["v5e", "v5p"])
+@pytest.mark.parametrize("lam", [0.1, 0.5, 0.9])
+def test_stressor_occupies_lambda_on_axis(dev, lam):
+    for axis in RESOURCE_AXES:
+        st = stressor(axis, lam, dev)
+        u = st.utilization(dev)
+        assert u[axis] == pytest.approx(lam, rel=1e-9)
+        for other in RESOURCE_AXES:
+            if other != axis:
+                assert u[other] == 0.0
+        # duration-bound by construction: occupies lam, not saturated
+        assert st.isolated_time(dev) == pytest.approx(1.0)
+
+
+# ------------------------------------------------------------------ #
+#  measurement sweep structure                                        #
+# ------------------------------------------------------------------ #
+def test_sweep_covers_axes_probe_kinds_and_cache():
+    cols = sweep_colocations(["a", "b"], DEV)
+    for v in ("a", "b"):
+        mine = [c for c in cols if c.victim == v]
+        axes = {c.single_axis for c in mine if c.single_axis}
+        assert axes == set(RESOURCE_AXES)
+        assert any(c.observe == "stressor" for c in mine)
+        assert any(len(c.stressors) > 1 for c in mine)
+        ws = sorted(c.stressors[0].working_set
+                    for c in mine if c.is_cache_probe)
+        assert ws == sorted(f * DEV.cache_capacity
+                            for f in CACHE_WS_FRACTIONS)
+
+
+def test_colocation_scenario_reverse_probe_observes_stressor():
+    k = KernelProfile("k", demand={"hbm": 0.5 * DEV.capacity("hbm")},
+                      duration=1.0)
+    c = Colocation("k", (StressorSpec("hbm", 0.9),), observe="stressor")
+    sc = colocation_scenario(c, k, DEV, {})
+    assert sc.victims[0].name.startswith("stress:hbm")
+    assert k in sc.background
+    with pytest.raises(ValueError):
+        colocation_scenario(Colocation("k", (), observe="stressor"),
+                            k, DEV, {})
+
+
+def test_reverse_probe_reveals_sub_fair_share_demand():
+    # u=0.3 victim vs a single lam=0.9 stressor: the victim is never
+    # throttled (fair share 0.5 > 0.3) but the stressor IS - the whole
+    # reason the sweep measures both sides (mxu: no queueing inflation,
+    # so the max-min algebra is exact)
+    u = 0.3
+    k = KernelProfile("k", demand={"mxu": u * DEV.capacity("mxu")},
+                      duration=1.0)
+    fwd = colocation_scenario(
+        Colocation("k", (StressorSpec("mxu", 0.9),)), k, DEV, {})
+    rev = colocation_scenario(
+        Colocation("k", (StressorSpec("mxu", 0.9),), observe="stressor"),
+        k, DEV, {})
+    s_fwd, s_rev = solve_scenarios([fwd, rev], DEV).slowdowns[:, 0]
+    assert s_fwd == pytest.approx(1.0)
+    assert s_rev == pytest.approx(0.9 / (1.0 - u), rel=1e-6)
+
+
+# ------------------------------------------------------------------ #
+#  synthetic backend                                                  #
+# ------------------------------------------------------------------ #
+def _truth(dev=DEV, seed=7, names=("decode", "gemm", "attn")):
+    rng = np.random.default_rng(seed)
+    base = bench_calib.base_kernels(dev)
+    return {n: perturb_profile(base[n], rng, scale=0.25, dev=dev)
+            for n in names}
+
+
+def test_synthetic_backend_same_seed_bit_identical():
+    truth = _truth()
+    a = SyntheticBackend(truth, DEV, noise=0.02, seed=5).run_sweep(
+        sorted(truth))
+    b = SyntheticBackend(truth, DEV, noise=0.02, seed=5).run_sweep(
+        sorted(truth))
+    assert np.array_equal(a.slowdowns, b.slowdowns)
+    assert a.isolated_times == b.isolated_times
+    c = SyntheticBackend(truth, DEV, noise=0.02, seed=6).run_sweep(
+        sorted(truth))
+    assert not np.array_equal(a.slowdowns, c.slowdowns)
+
+
+def test_synthetic_backend_hides_truth_but_serves_it():
+    truth = _truth(names=("decode",))
+    be = SyntheticBackend(truth, DEV)
+    cols = [Colocation("decode", (StressorSpec("hbm", 0.9),))]
+    expect = solve_scenarios(
+        [colocation_scenario(cols[0], truth["decode"], DEV, truth)],
+        DEV).slowdowns[0, 0]
+    assert be.measure(cols)[0] == pytest.approx(float(expect))
+    assert be.isolated_time("decode") == pytest.approx(
+        truth["decode"].isolated_time(DEV))
+
+
+# ------------------------------------------------------------------ #
+#  round-trip fit (the tentpole property)                             #
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_roundtrip_recovers_heldout_mixes_within_5pct(seed):
+    # random perturbation -> sweep -> fit -> score on mixes the fitter
+    # never saw; the bench gates one seed, this property-checks more
+    truth = _truth(seed=seed)
+    be = SyntheticBackend(truth, DEV, seed=seed)
+    fitted = fit_profiles(be.run_sweep(sorted(truth)))
+    rep = validate(fitted, be,
+                   holdout_mixes(sorted(truth),
+                                 np.random.default_rng(seed + 100)))
+    assert rep.max_rel_error <= 0.05, rep.worst_mix
+
+
+def test_roundtrip_recovers_axis_demands_and_cache_knobs():
+    truth = _truth(seed=7)
+    be = SyntheticBackend(truth, DEV, seed=7)
+    fitted = fit_profiles(be.run_sweep(sorted(truth)))
+    for name, true_k in truth.items():
+        got = profile_to_params(fitted[name], DEV)
+        want = profile_to_params(true_k, DEV)
+        for axis in RESOURCE_AXES:
+            # reverse probes resolve u > 0.02; below that the demand is
+            # unobservable under max-min and may fit as ~0
+            if want[f"u:{axis}"] > 0.05:
+                assert got[f"u:{axis}"] == pytest.approx(
+                    want[f"u:{axis}"], abs=0.03), (name, axis)
+        if want["ws"] > 0:
+            assert got["ws"] == pytest.approx(want["ws"], rel=0.5)
+            assert got["hit"] == pytest.approx(want["hit"], abs=0.15)
+        assert fitted[name].isolated_time(DEV) == pytest.approx(
+            true_k.isolated_time(DEV))
+
+
+def test_roundtrip_survives_measurement_noise():
+    truth = _truth(seed=3)
+    be = SyntheticBackend(truth, DEV, noise=0.01, seed=3)
+    fitted = fit_profiles(be.run_sweep(sorted(truth)))
+    clean = SyntheticBackend(truth, DEV, seed=3)   # score against truth
+    rep = validate(fitted, clean,
+                   holdout_mixes(sorted(truth),
+                                 np.random.default_rng(103)))
+    assert rep.max_rel_error <= 0.15
+
+
+def test_perturb_profile_seeded_and_feasible():
+    base = bench_calib.base_kernels(DEV)["decode"]
+    a = perturb_profile(base, np.random.default_rng(9), dev=DEV)
+    b = perturb_profile(base, np.random.default_rng(9), dev=DEV)
+    assert a.demand == b.demand and a.duration == b.duration
+    for _ in range(20):
+        p = perturb_profile(base, np.random.default_rng(_), scale=0.6,
+                            dev=DEV)
+        assert all(u <= 1.0 + 1e-9 for u in p.utilization(DEV).values())
+
+
+def test_predict_slowdowns_matches_backend_on_truth():
+    # the fitter's forward model and the backend share one lowering:
+    # predicting with the TRUE profiles reproduces the measurements
+    truth = _truth(seed=11)
+    be = SyntheticBackend(truth, DEV, seed=11)
+    cols = sweep_colocations(sorted(truth), DEV)
+    np.testing.assert_allclose(predict_slowdowns(truth, cols, DEV),
+                               be.measure(cols), rtol=1e-9)
+
+
+# ------------------------------------------------------------------ #
+#  drift monitor                                                      #
+# ------------------------------------------------------------------ #
+def test_monitor_flags_after_warmup_only():
+    mon = DriftMonitor(DriftConfig(warmup=4, threshold=0.15))
+    newly = [mon.observe("w", 1.0, 1.5) for _ in range(6)]
+    assert newly.index(True) == 3            # obs #4 = first eligible
+    assert sum(newly) == 1                   # flag fires once
+    assert mon.is_flagged("w") and mon.flags == 1
+    assert mon.divergence("w") > 0.15
+
+
+def test_monitor_silent_on_agreement_and_small_noise():
+    mon = DriftMonitor(DriftConfig(warmup=3, threshold=0.15))
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        assert not mon.observe("w", 2.0, 2.0)
+        assert not mon.observe("v", 1.5,
+                               1.5 * math.exp(0.01 * rng.standard_normal()))
+    assert mon.flagged == [] and mon.flags == 0
+
+
+def test_monitor_forget_drops_state():
+    mon = DriftMonitor(DriftConfig(warmup=1))
+    mon.observe("w", 1.0, 2.0)
+    assert mon.is_flagged("w")
+    mon.forget("w")
+    assert not mon.is_flagged("w") and mon.flagged == []
+    assert mon.flags == 1                    # history of flag events stays
+
+
+def _drift_pair(scale=1.7):
+    """Believed vs true (scaled) single-kernel roofline-bound workload
+    plus a contending background - the regime where a demand-scale
+    shift is observable (duration-bound workloads hide it)."""
+    dev = TPU_V5P
+    k = KernelProfile("k", demand={"hbm": 0.5 * dev.capacity("hbm")},
+                      duration=0.5)
+    believed = WorkloadProfile("w", kernels=(k,))
+    true = scale_workload(believed, scale)
+    background = (stressor("hbm", 0.9, dev),)
+    return dev, believed, true, background
+
+
+def _fold(w, background, believed, dev):
+    s = solve_scenarios([Scenario((w.kernels[0],), background)],
+                        dev).slowdowns[0, 0]
+    return float(s) * w.total_time(dev) / believed.total_time(dev)
+
+
+def test_monitor_refit_recovers_demand_scale():
+    dev, believed, true, bg = _drift_pair(scale=1.7)
+    mon = DriftMonitor(DriftConfig(warmup=3))
+    pred = _fold(believed, bg, believed, dev)
+    obs = _fold(true, bg, believed, dev)
+    assert obs > pred                        # shift is observable here
+    flagged = [mon.observe("w", pred, obs, bg, None, dev)
+               for _ in range(5)]
+    assert any(flagged)
+    refit = mon.refit("w", believed)
+    got = (refit.kernels[0].demand["hbm"]
+           / believed.kernels[0].demand["hbm"])
+    assert got == pytest.approx(1.7, rel=0.1)
+    assert not mon.is_flagged("w")           # refit resets the state
+    assert mon.refits == 1
+    # corrected profile predicts the observations it was fitted from
+    assert _fold(refit, bg, believed, dev) == pytest.approx(obs, rel=0.05)
+
+
+def test_monitor_refit_budget_and_empty_cases():
+    dev, believed, true, bg = _drift_pair()
+    mon = DriftMonitor(DriftConfig(warmup=1, max_refits=1))
+    assert not mon.can_refit("unseen")
+    assert mon.refit("unseen", believed) is None
+    mon.observe("w", 1.0, 2.0)               # no device -> no samples
+    assert not mon.can_refit("w")
+    obs = _fold(true, bg, believed, dev)
+    mon.observe("w", 1.0, obs, bg, None, dev)
+    assert mon.can_refit("w")
+    assert mon.refit("w", believed) is not None
+    mon.observe("w", 1.0, obs, bg, None, dev)
+    assert not mon.can_refit("w")            # budget spent
+    assert mon.refit("w", believed) is None
+
+
+def test_scale_workload_scales_demands_only():
+    _, believed, _, _ = _drift_pair()
+    s = scale_workload(believed, 2.0)
+    assert s.kernels[0].demand["hbm"] == pytest.approx(
+        2.0 * believed.kernels[0].demand["hbm"])
+    assert s.kernels[0].duration == believed.kernels[0].duration
+    assert s.name == believed.name
+
+
+# ------------------------------------------------------------------ #
+#  sim integration (the bench_calib drift gate, property form)         #
+# ------------------------------------------------------------------ #
+@pytest.fixture(scope="module")
+def clean_run():
+    sim = Simulator(generate_trace(TraceConfig(**bench_calib.DRIFT_TRACE)),
+                    bench_calib.drift_devices())
+    return sim.run()
+
+
+@pytest.fixture(scope="module")
+def shift_target():
+    return bench_calib.pick_shift_target()
+
+
+@pytest.fixture(scope="module")
+def shifted_run(shift_target):
+    return bench_calib.run_drift(*shift_target)
+
+
+def test_sim_clean_trace_zero_flags(clean_run):
+    calib = clean_run["calib"]
+    assert calib["observations"] > 0
+    assert calib["flags"] == 0 and calib["refits"] == 0
+    assert calib["flagged_tenants"] == []
+
+
+def test_sim_shift_flags_and_refits_exactly_the_tenant(
+        shift_target, shifted_run):
+    tenant, _ = shift_target
+    calib = shifted_run["calib"]
+    assert calib["flags"] >= 1 and calib["refits"] >= 1
+    assert calib["flagged_tenants"] == [tenant]
+    assert shifted_run["fleet"]["event_loop_errors"] == 0
+
+
+def test_sim_shifted_report_bit_identical(shift_target, shifted_run):
+    assert bench_calib.run_drift(*shift_target) == shifted_run
+
+
+def test_sim_calibration_can_be_disabled(shift_target):
+    tenant, scale = shift_target
+    cfg = TraceConfig(**bench_calib.DRIFT_TRACE,
+                      profile_shifts=((bench_calib.SHIFT_T, tenant,
+                                       scale),))
+    sim = Simulator(generate_trace(cfg), bench_calib.drift_devices(),
+                    sim_config=SimConfig(calibrate=False))
+    report = sim.run()
+    assert sim.fleet.calib is None
+    assert report["calib"] == {"observations": 0, "flags": 0,
+                               "refits": 0, "flagged_tenants": []}
+
+
+def test_sim_shift_unknown_tenant_raises():
+    cfg = TraceConfig(**bench_calib.DRIFT_TRACE,
+                      profile_shifts=((5.0, "nope", 2.0),))
+    sim = Simulator(generate_trace(cfg), bench_calib.drift_devices())
+    with pytest.raises(KeyError):
+        sim.run()
+
+
+# ------------------------------------------------------------------ #
+#  timers / pallas backend smoke                                      #
+# ------------------------------------------------------------------ #
+def test_median_iqr_time_sanity():
+    calls = []
+    med, iqr = median_iqr_time(lambda: calls.append(1), repeats=5,
+                               warmup=2)
+    assert len(calls) == 7
+    assert med > 0.0 and iqr >= 0.0
+
+
+def test_pallas_backend_interpret_smoke():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.calib import PallasBackend
+
+    x = jnp.ones((64, 64), jnp.float32)
+    victim = jax.jit(lambda: (x @ x).sum())
+    be = PallasBackend({"v": victim}, DEV, repeats=2, interpret=True)
+    assert be.isolated_time("v") > 0.0
+    cols = [Colocation("v", (StressorSpec("vpu", 0.2),)),
+            Colocation("v", (StressorSpec("vpu", 0.2),),
+                       observe="stressor")]
+    slows = be.measure(cols)
+    assert slows.shape == (2,) and np.all(slows >= 1.0)
+    with pytest.raises(NotImplementedError):
+        be.measure([Colocation("v", cohort=("v",))])
